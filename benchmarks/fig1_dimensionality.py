@@ -1,0 +1,25 @@
+"""Fig. 1: improvement factor vs dimensionality p (strong vs safe rules)."""
+from repro.data import make_synthetic
+from .common import emit, improvement_suite
+
+
+def run(scale="smoke"):
+    ps = [1024, 2048, 4096] if scale == "smoke" else [1000, 2000, 5000, 10000]
+    n = 150 if scale == "smoke" else 200
+    reps = 1 if scale == "smoke" else 20
+    for p in ps:
+        stats = {}
+        for r in range(reps):
+            d = make_synthetic(seed=r, n=n, p=p, m=max(8, p // 64),
+                               size_range=(3, 64))
+            out = improvement_suite(d, methods=("dfr", "sparsegl", "gap"),
+                                    length=15)
+            for m in ("dfr", "sparsegl", "gap"):
+                if m in out:
+                    stats.setdefault(m, []).append(
+                        (out[m]["improvement"], out[m]["input_prop"]))
+        for m, v in stats.items():
+            imp = sum(x[0] for x in v) / len(v)
+            prop = sum(x[1] for x in v) / len(v)
+            emit(f"fig1/{m}/p={p}", 0.0,
+                 f"improvement={imp:.2f}x input_prop={prop:.3f}")

@@ -1,0 +1,27 @@
+"""Fig. 2: improvement factor vs data sparsity and signal strength."""
+from repro.data import make_synthetic
+from .common import emit, improvement_suite
+
+
+def run(scale="smoke"):
+    n, p = (150, 1536) if scale == "smoke" else (200, 1000)
+    reps = 2 if scale == "smoke" else 20
+    for sp in ([0.1, 0.4] if scale == "smoke" else [0.1, 0.2, 0.4, 0.6, 0.8]):
+        stats = {}
+        for r in range(reps):
+            d = make_synthetic(seed=r, n=n, p=p, m=16, group_sparsity=sp,
+                               var_sparsity=sp)
+            out = improvement_suite(d, length=15)
+            for m in ("dfr", "sparsegl"):
+                stats.setdefault(m, []).append(out[m]["improvement"])
+        for m, v in stats.items():
+            emit(f"fig2/sparsity={sp}/{m}", 0.0, f"improvement={sum(v)/len(v):.2f}x")
+    for snr in ([1.0, 4.0] if scale == "smoke" else [0.5, 1, 2, 4, 8]):
+        stats = {}
+        for r in range(reps):
+            d = make_synthetic(seed=100 + r, n=n, p=p, m=16, signal_sd=snr)
+            out = improvement_suite(d, length=15)
+            for m in ("dfr", "sparsegl"):
+                stats.setdefault(m, []).append(out[m]["improvement"])
+        for m, v in stats.items():
+            emit(f"fig2/signal={snr}/{m}", 0.0, f"improvement={sum(v)/len(v):.2f}x")

@@ -1,0 +1,31 @@
+"""Fig. 3: input proportion vs within-group correlation rho and alpha."""
+import numpy as np
+import jax.numpy as jnp
+from repro.core import Penalty, fit_path
+from repro.data import make_synthetic
+from .common import emit, problem_from
+
+
+def run(scale="smoke"):
+    n, p = (120, 768) if scale == "smoke" else (200, 1000)
+    reps = 2 if scale == "smoke" else 20
+    for rho in ([0.0, 0.6] if scale == "smoke" else [0.0, 0.3, 0.6, 0.9]):
+        props = {"dfr": [], "sparsegl": []}
+        for r in range(reps):
+            d = make_synthetic(seed=r, n=n, p=p, m=10, rho=rho)
+            prob = problem_from(d)
+            for m in props:
+                res = fit_path(prob, Penalty(d.groups, 0.95), screen=m, length=12, max_iters=2000)
+                props[m].append(np.mean(res.metrics["opt_prop_v"]))
+        for m, v in props.items():
+            emit(f"fig3/rho={rho}/{m}", 0.0, f"input_prop={np.mean(v):.3f}")
+    for alpha in ([0.5, 0.95] if scale == "smoke" else [0.1, 0.3, 0.5, 0.7, 0.9, 0.95]):
+        props = {"dfr": [], "sparsegl": []}
+        for r in range(reps):
+            d = make_synthetic(seed=50 + r, n=n, p=p, m=10)
+            prob = problem_from(d)
+            for m in props:
+                res = fit_path(prob, Penalty(d.groups, alpha), screen=m, length=12, max_iters=2000)
+                props[m].append(np.mean(res.metrics["opt_prop_v"]))
+        for m, v in props.items():
+            emit(f"fig3/alpha={alpha}/{m}", 0.0, f"input_prop={np.mean(v):.3f}")

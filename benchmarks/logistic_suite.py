@@ -1,0 +1,16 @@
+"""Appendix D.6: logistic-model improvement factors."""
+from repro.data import make_synthetic
+from .common import emit, improvement_suite
+
+
+def run(scale="smoke"):
+    n, p = (150, 1536) if scale == "smoke" else (200, 1000)
+    reps = 2 if scale == "smoke" else 10
+    stats = {}
+    for r in range(reps):
+        d = make_synthetic(seed=r, n=n, p=p, m=16, loss="logistic")
+        out = improvement_suite(d, length=12, term=0.3)
+        for m in ("dfr", "sparsegl"):
+            stats.setdefault(m, []).append(out[m]["improvement"])
+    for m, v in stats.items():
+        emit(f"logistic/{m}", 0.0, f"improvement={sum(v)/len(v):.2f}x")

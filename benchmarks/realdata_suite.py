@@ -1,0 +1,17 @@
+"""Figs. 4/5: real-data suite on Table A37 *shape stand-ins* (no network)."""
+from repro.data import standin, TABLE_A37
+from .common import emit, improvement_suite
+
+
+def run(scale="smoke"):
+    frac = 0.15 if scale == "smoke" else 1.0
+    for name in TABLE_A37:
+        d = standin(name, scale=frac)
+        length = 12 if scale == "smoke" else 100
+        out = improvement_suite(d, length=length, term=0.2)
+        for m in ("dfr", "sparsegl"):
+            if m in out:
+                emit(f"realdata/{name}/{m} (n={d.X.shape[0]},p={d.X.shape[1]})",
+                     0.0, f"improvement={out[m]['improvement']:.2f}x "
+                     f"input_prop={out[m]['input_prop']:.3f} "
+                     f"l2={out[m]['l2_to_noscreen']:.2e}")

@@ -1,0 +1,102 @@
+"""Render results/{dryrun,roofline}.json into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.report [--results results/]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def fmt(x, unit=""):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) >= 1e4 or abs(x) < 1e-3:
+            return f"{x:.2e}{unit}"
+        return f"{x:.3g}{unit}"
+    return f"{x}{unit}"
+
+
+def dryrun_table(results: dict, mesh: str) -> str:
+    rows = ["| arch | cell | chips | flops/dev | bytes/dev | coll bytes/dev | "
+            "arg GB/dev | temp GB/dev | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("mesh") != mesh or "error" in r:
+            continue
+        mem = r.get("memory", {})
+        arg = (mem.get("argument_bytes") or 0) / 2**30
+        tmp = (mem.get("temp_bytes") or 0) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {r['chips']} | "
+            f"{fmt(float(r['flops_per_device'] or 0))} | "
+            f"{fmt(float(r['bytes_per_device'] or 0))} | "
+            f"{fmt(float(r['collectives']['total']))} | "
+            f"{arg:.2f} | {tmp:.2f} | {r['compile_s']} |")
+    return "\n".join(rows)
+
+
+MOVE_HINTS = {
+    "collective": "cut FSDP gather traffic (bf16/int8 weight gathers, remat "
+                  "policy that avoids the 3rd re-gather)",
+    "memory": "serve weights in bf16 (halves param reads) / widen per-chip batch",
+    "compute": "skip out-of-window attention compute (static-window kernel); "
+               "drop the remat recompute via selective policies",
+}
+
+
+def roofline_table(results: dict, variant_filter=None) -> str:
+    rows = ["| arch | cell | variant | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPS | useful ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        v = r.get("variant", "baseline")
+        if variant_filter is not None and v not in variant_filter:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {v} | {fmt(r['compute_s'])} | "
+            f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | {r['dominant']} | "
+            f"{fmt(r['model_flops'])} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def bottleneck_notes(results: dict) -> str:
+    lines = []
+    for key in sorted(results):
+        r = results[key]
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        lines.append(f"* **{r['arch']} / {r['cell']}** — {r['dominant']}-bound "
+                     f"({fmt(r['bottleneck_s'])}s): {MOVE_HINTS[r['dominant']]}.")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    args = ap.parse_args(argv)
+    with open(os.path.join(args.results, "dryrun.json")) as f:
+        dr = json.load(f)
+    print("## Dry-run 16x16 (single pod)\n")
+    print(dryrun_table(dr, "16x16"))
+    print("\n## Dry-run 2x16x16 (multi-pod)\n")
+    print(dryrun_table(dr, "2x16x16"))
+    rl_path = os.path.join(args.results, "roofline.json")
+    if os.path.exists(rl_path):
+        with open(rl_path) as f:
+            rl = json.load(f)
+        print("\n## Roofline (single pod, per-cell)\n")
+        print(roofline_table(rl))
+        print("\n### Dominant-term notes\n")
+        print(bottleneck_notes(rl))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [--scale smoke|paper] [--only NAME]``
+prints ``name,us_per_call,derived`` CSV rows (smoke scale finishes on one
+CPU core; paper scale reproduces the paper's dimensions).
+"""
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig1_dimensionality", "fig2_sparsity_signal", "fig3_correlation_alpha",
+    "table1_interactions", "logistic_suite", "cv_table", "realdata_suite",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["smoke", "paper"], default="smoke")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    mods = [m for m in MODULES if args.only is None or args.only in m]
+    t0 = time.perf_counter()
+    for m in mods:
+        print(f"# --- {m} ({args.scale}) ---", flush=True)
+        mod = importlib.import_module(f"benchmarks.{m}")
+        mod.run(scale=args.scale)
+    print(f"# total {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

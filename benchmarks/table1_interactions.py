@@ -1,0 +1,23 @@
+"""Table 1: improvement factors on interaction designs (orders 2/3)."""
+from repro.data import make_interactions
+from .common import emit, improvement_suite
+
+
+def run(scale="smoke"):
+    orders = [2] if scale == "smoke" else [2, 3]
+    kw = dict(n=80, p=320, m=32, size_range=(3, 12)) if scale == "smoke" else \
+        dict(n=80, p=400, m=52, size_range=(3, 15))
+    reps = 2 if scale == "smoke" else 10
+    for order in orders:
+        stats = {}
+        for r in range(reps):
+            d = make_interactions(seed=r, order=order, **kw)
+            out = improvement_suite(d, length=20)
+            out_a = improvement_suite(d, length=20, adaptive=True,
+                                      methods=("dfr",))
+            for m in ("dfr", "sparsegl"):
+                stats.setdefault(m, []).append(out[m]["improvement"])
+            stats.setdefault("dfr_asgl", []).append(out_a["dfr"]["improvement"])
+        for m, v in stats.items():
+            emit(f"table1/order={order}/{m} (p_exp={d.X.shape[1]})", 0.0,
+                 f"improvement={sum(v)/len(v):.2f}x")

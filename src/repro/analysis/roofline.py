@@ -1,0 +1,192 @@
+"""Three-term roofline model for every (arch x shape) cell.
+
+Methodology (documented in EXPERIMENTS.md §Roofline): XLA's cost_analysis
+counts a scan body ONCE regardless of trip count (verified in
+tests/test_roofline.py), so raw compiled numbers undercount layer-stacked
+models ~L-fold.  The roofline therefore uses:
+
+  * FLOPs / HBM bytes — an analytic per-op model of *this implementation*
+    (masked-full attention, remat factor, MoE capacity, chunked WKV/SSM),
+    validated against cost_analysis on small fully-unrolled configs;
+  * collective bytes — parsed from optimized SPMD HLO of L=1 / L=2
+    *unrolled* compiles on the production mesh and extrapolated linearly
+    (collectives live at layer boundaries, never inside the inner scans).
+
+Terms (seconds, per assignment):
+  compute    = FLOPs_global   / (chips * 197e12)
+  memory     = bytes_global   / (chips * 819e9)
+  collective = coll_bytes_global / (chips * 50e9)
+
+roofline_fraction = useful-compute-time / bottleneck-time, where useful =
+MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (serve).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..models.config import ModelConfig, SHAPES, ShapeCell
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+CHIPS = 256                  # single-pod roofline mesh
+
+
+def _attn_context(S: int, window: int, impl: str) -> float:
+    """Average attended context per query under this implementation."""
+    w = min(window, S)
+    if impl == "masked_full":          # baseline: full S scores, masked
+        return float(S)
+    if impl == "static_window":        # window+chunk KV slice per Q chunk
+        return float(S) if w >= S else float(min(S, w + 512))
+    # ideal windowed/causal-skip: sum_t min(t+1, w) / S
+    return (w * (w + 1) / 2 + (S - w) * w) / S if S > w else (S + 1) / 2
+
+
+def forward_flops(cfg: ModelConfig, S: int, B: int, impl: str = "masked_full") -> dict:
+    """Forward-pass FLOPs (global), by component."""
+    D = B * S
+    d, f = cfg.d_model, cfg.d_ff
+    Hd, Kd = cfg.n_heads * cfg.head_dim, cfg.n_kv * cfg.head_dim
+    L = cfg.n_layers
+    out = {}
+    if cfg.family == "rwkv":
+        c, N = 16, cfg.head_dim
+        out["proj"] = L * 2 * D * d * d * 5 + L * 2 * D * d * 64 * 2
+        out["mix"] = L * (4 * D * c * d + 4 * D * d * N)
+        out["mlp"] = L * 2 * D * d * (2 * f + d)
+        out["attn"] = 0.0
+    else:
+        out["proj"] = L * 2 * D * d * (2 * Hd + 2 * Kd)
+        ctx = [_attn_context(S, w, impl) for w in cfg.windows(S)]
+        out["attn"] = sum(4 * B * S * cx * Hd for cx in ctx)
+        if cfg.n_experts:
+            out["mlp"] = L * (2 * D * d * cfg.n_experts +
+                              2 * D * cfg.top_k * 3 * d * f)
+        else:
+            out["mlp"] = L * 2 * D * 3 * d * f
+        if cfg.family == "hybrid":
+            di, N = Hd, cfg.ssm_state
+            out["ssm"] = L * (2 * D * d * 2 * di + 4 * D * di * 64 +
+                              2 * D * di * 2 * N + 8 * D * di * N +
+                              2 * D * di * d)
+    out["head"] = 2 * D * d * cfg.vocab
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def decode_flops(cfg: ModelConfig, S: int, B: int, impl: str = "baseline") -> dict:
+    """One serve_step: single new token against a seq_len-S cache."""
+    d, f = cfg.d_model, cfg.d_ff
+    Hd, Kd = cfg.n_heads * cfg.head_dim, cfg.n_kv * cfg.head_dim
+    L = cfg.n_layers
+    out = {}
+    if cfg.family == "rwkv":
+        N = cfg.head_dim
+        out["proj"] = L * 2 * B * d * d * 5
+        out["mix"] = L * 4 * B * d * N
+        out["mlp"] = L * 2 * B * d * (2 * f + d)
+        out["attn"] = 0.0
+    else:
+        C = cfg.cache_len(S)
+        out["proj"] = L * 2 * B * d * (2 * Hd + 2 * Kd)
+        out["attn"] = L * 4 * B * C * Hd      # scores + values vs cache
+        if cfg.n_experts:
+            out["mlp"] = L * (2 * B * d * cfg.n_experts +
+                              2 * B * cfg.top_k * 3 * d * f)
+        else:
+            out["mlp"] = L * 2 * B * 3 * d * f
+        if cfg.family == "hybrid":
+            di, N = Hd, cfg.ssm_state
+            out["ssm"] = L * (2 * B * d * 2 * di + 4 * B * di * 64 +
+                              2 * B * di * 2 * N + 8 * B * di * N +
+                              2 * B * di * d)
+    out["head"] = 2 * B * d * cfg.vocab
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def cell_flops(cfg: ModelConfig, cell: ShapeCell, impl: str = "masked_full") -> dict:
+    if cell.kind == "decode":
+        fl = decode_flops(cfg, cell.seq_len, cell.global_batch)
+        fl["multiplier"] = 1.0
+        return fl
+    fwd = forward_flops(cfg, cell.seq_len, cell.global_batch, impl)
+    mult = 4.0 if cell.kind == "train" else 1.0   # fwd + bwd(2x) + remat(1x)
+    return {**fwd, "total": fwd["total"] * mult, "multiplier": mult}
+
+
+def cell_bytes(cfg: ModelConfig, cell: ShapeCell, n_params: int,
+               impl: str = "masked_full", param_bytes: int = 4) -> float:
+    """Analytic global HBM bytes per step (param_bytes: 4 = f32 master
+    weights; 2 = bf16 serving weights)."""
+    S, B = cell.seq_len, cell.global_batch
+    D = B * S
+    d = cfg.d_model
+    P = n_params
+    act = 2  # bf16
+    if cell.kind == "train":
+        # f32 params: fwd + recompute + bwd reads, grad, m/v r/w, write
+        pbytes = P * param_bytes * (3 + 1 + 4 + 1)
+        abytes = cfg.n_layers * D * d * act * 4     # saves + recompute traffic
+        lbytes = D * cfg.vocab * act * 3            # logits fwd/bwd
+        return float(pbytes + abytes + lbytes)
+    if cell.kind == "prefill":
+        pbytes = P * param_bytes
+        abytes = cfg.n_layers * D * d * act * 2
+        lbytes = B * cfg.vocab * act                # only last-token logits kept
+        return float(pbytes + abytes + lbytes)
+    # decode
+    pbytes = P * param_bytes
+    if cfg.family == "rwkv":
+        cache = cfg.n_layers * B * d * cfg.head_dim * 4 * 2   # wkv state r/w
+    else:
+        C = cfg.cache_len(S)
+        kv_b = 1 if cfg.kv_quant else act        # int8 cache variant
+        cache = cfg.n_layers * B * C * cfg.n_kv * (cfg.head_dim * 2 * kv_b
+                                                   + (8 if cfg.kv_quant else 0))
+    return float(pbytes + cache + B * cfg.vocab * act)
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell, n_params: int,
+                n_active: int) -> float:
+    """The assignment's MODEL_FLOPS: 6·N·D train, 2·N_active·D serve."""
+    if cell.kind == "train":
+        return 6.0 * n_active * cell.seq_len * cell.global_batch
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.seq_len * cell.global_batch
+    return 2.0 * n_active * cell.global_batch       # one token
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int = CHIPS) -> dict:
+    t_c = flops / (chips * PEAK_FLOPS)
+    t_m = hbm_bytes / (chips * HBM_BW)
+    t_x = coll_bytes / (chips * LINK_BW)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom[0], "bottleneck_s": dom[1]}
+
+
+def analyze_cell(cfg: ModelConfig, cell: ShapeCell, n_params: int,
+                 coll_bytes_global: float, impl: str = "masked_full",
+                 chips: int = CHIPS, n_active: int | None = None,
+                 param_bytes: int = 4) -> dict:
+    n_active = n_active if n_active is not None else n_params
+    fl = cell_flops(cfg, cell, impl)
+    hb = cell_bytes(cfg, cell, n_params, impl, param_bytes)
+    mf = model_flops(cfg, cell, n_params, n_active)
+    terms = roofline_terms(fl["total"], hb, coll_bytes_global, chips)
+    t_useful = mf / (chips * PEAK_FLOPS)
+    return {
+        "flops_global": fl["total"], "bytes_global": hb,
+        "coll_bytes_global": coll_bytes_global,
+        "model_flops": mf,
+        "useful_ratio": mf / fl["total"],
+        "roofline_fraction": t_useful / max(terms["bottleneck_s"], 1e-30),
+        "flops_breakdown": {k: v for k, v in fl.items()
+                            if k not in ("total", "multiplier")},
+        **terms,
+    }

@@ -1,0 +1,28 @@
+"""Assigned-architecture registry: ``get(name)`` -> ModelConfig.
+
+Each module defines ``config()`` with the exact assignment parameters plus a
+``reduced()`` config of the same family for CPU smoke tests.
+"""
+from importlib import import_module
+
+ARCHS = [
+    "internvl2_76b", "rwkv6_7b", "mixtral_8x22b", "dbrx_132b", "deepseek_67b",
+    "gemma3_27b", "gemma2_9b", "gemma2_27b", "hubert_xlarge", "hymba_1_5b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+_ALIASES.update({"hymba-1.5b": "hymba_1_5b", "internvl2-76b": "internvl2_76b",
+                 "mixtral-8x22b": "mixtral_8x22b", "dbrx-132b": "dbrx_132b",
+                 "deepseek-67b": "deepseek_67b", "gemma3-27b": "gemma3_27b",
+                 "gemma2-9b": "gemma2_9b", "gemma2-27b": "gemma2_27b",
+                 "hubert-xlarge": "hubert_xlarge", "rwkv6-7b": "rwkv6_7b"})
+
+
+def get(name: str):
+    mod = import_module(f"repro.configs.{_ALIASES.get(name, name)}")
+    return mod.config()
+
+
+def get_reduced(name: str):
+    mod = import_module(f"repro.configs.{_ALIASES.get(name, name)}")
+    return mod.reduced()

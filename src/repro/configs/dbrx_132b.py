@@ -1,0 +1,20 @@
+"""dbrx-132b [moe]: 16 experts top-4, fine-grained MoE.
+
+40L d=6144 48H (GQA kv=8, hd=128) ff=10752 vocab=100352
+[hf:databricks/dbrx-base].  Full attention -> long_500k skipped.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="dbrx-132b", family="moe", n_layers=40, d_model=6144,
+        n_heads=48, n_kv=8, head_dim=128, d_ff=10752, vocab=100352,
+        n_experts=16, top_k=4, attn_pattern="global", rope_theta=5e5)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=96, vocab=256,
+                               n_experts=4, top_k=2)

@@ -1,0 +1,18 @@
+"""deepseek-67b [dense]: llama-arch, deep-narrow.
+
+95L d=8192 64H (GQA kv=8, hd=128) ff=22016 vocab=102400 [arXiv:2401.02954].
+Full attention -> long_500k skipped.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="deepseek-67b", family="dense", n_layers=95, d_model=8192,
+        n_heads=64, n_kv=8, head_dim=128, d_ff=22016, vocab=102400)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=3, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=160, vocab=256)

@@ -1,0 +1,20 @@
+"""gemma2-27b [dense]: alternating local/global + logit softcaps, wide FFN.
+
+46L d=4608 32H (GQA kv=16, hd=128) ff=36864 vocab=256000 [arXiv:2408.00118].
+long_500k skipped (alternating includes global layers).
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="gemma2-27b", family="dense", n_layers=46, d_model=4608,
+        n_heads=32, n_kv=16, head_dim=128, d_ff=36864, vocab=256000,
+        attn_pattern="alt_lg:4096", attn_softcap=50.0, final_softcap=30.0)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=256, vocab=256,
+                               attn_pattern="alt_lg:8")

@@ -1,0 +1,20 @@
+"""gemma2-9b [dense]: alternating local/global attention + logit softcaps.
+
+42L d=3584 16H (GQA kv=8, hd=256) ff=14336 vocab=256000 [arXiv:2408.00118].
+Alternating pattern includes full-attention layers -> long_500k skipped.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="gemma2-9b", family="dense", n_layers=42, d_model=3584,
+        n_heads=16, n_kv=8, head_dim=256, d_ff=14336, vocab=256000,
+        attn_pattern="alt_lg:4096", attn_softcap=50.0, final_softcap=30.0)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=128, vocab=256,
+                               attn_pattern="alt_lg:8")

@@ -1,0 +1,21 @@
+"""gemma3-27b [dense]: 5 local : 1 global attention, 128k context.
+
+62L d=5376 32H (GQA kv=16, hd=128) ff=21504 vocab=262144
+[hf:google/gemma-3-*].  Global layers are full attention -> long_500k
+skipped (DESIGN.md §5).
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="gemma3-27b", family="dense", n_layers=62, d_model=5376,
+        n_heads=32, n_kv=16, head_dim=128, d_ff=21504, vocab=262144,
+        attn_pattern="gemma3:1024", rope_theta=1e6)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=6, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=160, vocab=256,
+                               attn_pattern="gemma3:8")

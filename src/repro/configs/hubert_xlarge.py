@@ -1,0 +1,20 @@
+"""hubert-xlarge [audio]: encoder-only masked-prediction transformer.
+
+48L d=1280 16H (kv=16, hd=80) ff=5120 vocab=504 (cluster targets)
+[arXiv:2106.07447].  The conv frame frontend is a STUB: input_specs provide
+precomputed frame embeddings.  Encoder -> decode cells skipped.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="hubert-xlarge", family="encoder", n_layers=48, d_model=1280,
+        n_heads=16, n_kv=16, head_dim=80, d_ff=5120, vocab=504,
+        frontend="frames")
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=4, head_dim=16, d_ff=128, vocab=32)

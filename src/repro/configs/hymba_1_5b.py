@@ -1,0 +1,22 @@
+"""hymba-1.5b [hybrid]: parallel attention + mamba heads, ssm_state=16.
+
+32L d=1600 25H (GQA kv=5, hd=64) ff=5504 vocab=32001 [arXiv:2411.13676].
+Implemented with SWA(1024) on all layers (the released model keeps 3 global
+layers; simplified to a uniform ring cache — noted in DESIGN.md) ->
+sub-quadratic -> long_500k runs.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="hymba-1.5b", family="hybrid", n_layers=32, d_model=1600,
+        n_heads=25, n_kv=5, head_dim=64, d_ff=5504, vocab=32001,
+        ssm_state=16, attn_pattern="local:1024")
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=128, vocab=256,
+                               ssm_state=4, attn_pattern="local:8")

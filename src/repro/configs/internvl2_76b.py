@@ -1,0 +1,21 @@
+"""internvl2-76b [vlm]: InternViT frontend (STUB) + InternLM2 backbone.
+
+80L d=8192 64H (GQA kv=8, hd=128) ff=28672 vocab=128256 [arXiv:2404.16821].
+The patch frontend is a stub: input_specs provide precomputed patch
+embeddings (assignment rule for [vlm]).  Pure full attention -> long_500k
+skipped (DESIGN.md §5).
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="internvl2-76b", family="dense", n_layers=80, d_model=8192,
+        n_heads=64, n_kv=8, head_dim=128, d_ff=28672, vocab=128256,
+        attn_pattern="global", rope_theta=1e6, frontend="patches", n_patches=256)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=128, vocab=256, n_patches=8)

@@ -1,0 +1,20 @@
+"""mixtral-8x22b [moe]: 8 experts top-2, sliding-window attention.
+
+56L d=6144 48H (GQA kv=8, hd=128) ff=16384 vocab=32768 [arXiv:2401.04088].
+Pure SWA (4096) -> sub-quadratic -> long_500k runs with a ring cache.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="mixtral-8x22b", family="moe", n_layers=56, d_model=6144,
+        n_heads=48, n_kv=8, head_dim=128, d_ff=16384, vocab=32768,
+        n_experts=8, top_k=2, attn_pattern="local:4096", rope_theta=1e6)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=2, head_dim=16, d_ff=128, vocab=256,
+                               n_experts=4, top_k=2, attn_pattern="local:16")

@@ -1,0 +1,18 @@
+"""rwkv6-7b [ssm]: Finch — attention-free, data-dependent decay WKV.
+
+32L d=4096 (64 heads x 64) ff=14336 vocab=65536 [arXiv:2404.05892].
+O(1) decode state -> all four shape cells run, incl. long_500k.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+
+def config():
+    return ModelConfig(
+        name="rwkv6-7b", family="rwkv", n_layers=32, d_model=4096,
+        n_heads=64, n_kv=64, head_dim=64, d_ff=14336, vocab=65536)
+
+
+def reduced():
+    return dataclasses.replace(config(), n_layers=2, d_model=64, n_heads=4,
+                               n_kv=4, head_dim=16, d_ff=224, vocab=256)

@@ -1,0 +1,25 @@
+"""sgl_genomics: the paper's own workload at production scale.
+
+Biobank-sized sparse-group lasso: n = 262144 observations, p = 1048576
+features in m = 4096 contiguous pathways of 256, alpha = 0.95 — the
+DFR screening + compacted solve mapped onto the production mesh
+(X bf16 P("data","model") = 2 GB/chip on 256 chips).
+
+Cells (instead of the LM shape cells):
+  sgl_screen     one full screening pass: residual -> gradient ->
+                 eps-norm group rule -> variable rule -> KKT audit
+  sgl_path_step  one DFR path step: screen -> compact (gather O_v columns
+                 to a dense [n, 16384] data-parallel block) -> 100 FISTA
+                 iterations -> scatter + KKT
+"""
+from repro.distributed.dist_sgl import DistSGLConfig
+
+
+def config() -> DistSGLConfig:
+    return DistSGLConfig(n=262_144, p=1_048_576, group_size=256, alpha=0.95,
+                         fista_iters=100, solve_width=16_384, x_dtype="bfloat16")
+
+
+def reduced() -> DistSGLConfig:
+    return DistSGLConfig(n=128, p=1024, group_size=16, alpha=0.95,
+                         fista_iters=50, solve_width=128, x_dtype="float32")

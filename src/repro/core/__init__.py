@@ -1,0 +1,12 @@
+"""The paper's contribution: DFR screening for SGL/aSGL, as composable JAX modules."""
+from .groups import GroupInfo, to_padded, from_padded, group_l2, group_linf, expand
+from .epsilon_norm import epsilon_norm, epsilon_norm_exact, epsilon_norm_bisect, epsilon_dual_norm
+from .penalties import (Penalty, sgl_norm, sgl_prox, sgl_dual_norm, sgl_tau, sgl_eps,
+                        asgl_norm, asgl_prox, asgl_gamma_eps, soft_threshold)
+from .losses import Problem, loss_value, gradient, residual, lipschitz, standardize
+from .solvers import solve, fista, atos, SolveResult
+from .screening import (dfr_screen, dfr_screen_asgl, sparsegl_screen,
+                        gap_safe_screen, ScreenResult)
+from .kkt import kkt_violations
+from .adaptive import pca_weights, asgl_path_start
+from .path import fit_path, path_start, lambda_path, PathResult

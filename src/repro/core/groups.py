@@ -1,0 +1,109 @@
+"""Group structure bookkeeping for sparse-group models.
+
+Groups are disjoint, contiguous index ranges ``G_1, ..., G_m`` covering
+``{0, ..., p-1}`` (generators emit contiguous groups; callers with scattered
+groups permute columns first).  All screening/penalty math is expressed with
+either segment reductions keyed on ``group_id`` or a padded ``[m, max_size]``
+view produced by :func:`to_padded`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GroupInfo:
+    """Static description of a contiguous grouping of ``p`` variables."""
+
+    group_id: jnp.ndarray      # [p] int32, group index of each variable
+    sizes: jnp.ndarray         # [m] int32
+    starts: jnp.ndarray        # [m] int32, first variable index of each group
+    p: int                     # number of variables (static)
+    m: int                     # number of groups (static)
+    max_size: int              # max group size (static, sets padding)
+
+    # -- pytree plumbing (arrays are leaves; ints are static aux data) ------
+    def tree_flatten(self):
+        return (self.group_id, self.sizes, self.starts), (self.p, self.m, self.max_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        group_id, sizes, starts = leaves
+        p, m, max_size = aux
+        return cls(group_id, sizes, starts, p, m, max_size)
+
+    @classmethod
+    def from_sizes(cls, sizes) -> "GroupInfo":
+        sizes = np.asarray(sizes, dtype=np.int32)
+        starts = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int32)
+        p = int(sizes.sum())
+        gid = np.repeat(np.arange(len(sizes), dtype=np.int32), sizes)
+        return cls(
+            group_id=jnp.asarray(gid),
+            sizes=jnp.asarray(sizes),
+            starts=jnp.asarray(starts),
+            p=p,
+            m=int(len(sizes)),
+            max_size=int(sizes.max()),
+        )
+
+    @property
+    def sqrt_sizes(self) -> jnp.ndarray:
+        return jnp.sqrt(self.sizes.astype(jnp.float64 if jax.config.jax_enable_x64 else jnp.float32))
+
+    def pad_index(self) -> jnp.ndarray:
+        """[m, max_size] gather indices into a length-p vector; out-of-range
+        slots point at ``p`` (callers gather from a vector padded with 0)."""
+        offs = jnp.arange(self.max_size, dtype=jnp.int32)[None, :]
+        idx = self.starts[:, None] + offs
+        valid = offs < self.sizes[:, None]
+        return jnp.where(valid, idx, self.p), valid
+
+
+@partial(jax.jit, static_argnames=("info_p", "info_m", "info_max"))
+def _to_padded_impl(x, starts, sizes, info_p, info_m, info_max):
+    offs = jnp.arange(info_max, dtype=jnp.int32)[None, :]
+    idx = starts[:, None] + offs
+    valid = offs < sizes[:, None]
+    xp = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+    out = xp[jnp.where(valid, idx, info_p)]
+    return jnp.where(valid, out, 0), valid
+
+
+def to_padded(x: jnp.ndarray, g: GroupInfo):
+    """Gather a [p] vector into a zero-padded [m, max_size] view + validity mask."""
+    return _to_padded_impl(x, g.starts, g.sizes, g.p, g.m, g.max_size)
+
+
+def from_padded(xp: jnp.ndarray, g: GroupInfo) -> jnp.ndarray:
+    """Inverse of :func:`to_padded` (valid slots only)."""
+    idx, valid = g.pad_index()
+    flat_idx = jnp.where(valid, idx, g.p).reshape(-1)
+    out = jnp.zeros((g.p + 1,), xp.dtype).at[flat_idx].set(xp.reshape(-1))
+    return out[: g.p]
+
+
+def segment_sum(x: jnp.ndarray, g: GroupInfo) -> jnp.ndarray:
+    """Per-group sum of a [p] vector -> [m]."""
+    return jax.ops.segment_sum(x, g.group_id, num_segments=g.m)
+
+
+def group_l2(x: jnp.ndarray, g: GroupInfo) -> jnp.ndarray:
+    """Per-group l2 norms -> [m]."""
+    return jnp.sqrt(segment_sum(x * x, g))
+
+
+def group_linf(x: jnp.ndarray, g: GroupInfo) -> jnp.ndarray:
+    """Per-group l-inf norms -> [m]."""
+    return jax.ops.segment_max(jnp.abs(x), g.group_id, num_segments=g.m)
+
+
+def expand(per_group: jnp.ndarray, g: GroupInfo) -> jnp.ndarray:
+    """Broadcast a [m] per-group value back to [p]."""
+    return per_group[g.group_id]

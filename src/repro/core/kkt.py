@@ -1,0 +1,33 @@
+"""KKT optimality checks for SGL and aSGL (paper Sec. 2.3.3 / B.2.4).
+
+A screened-out variable ``i in G_g`` violates the KKT conditions at
+``lambda`` iff
+
+  SGL  (Eq. 17):  |S(grad_i f, lambda (1-alpha) sqrt(p_g))|     > lambda alpha
+  aSGL (Eq. 26):  |S(grad_i f, lambda (1-alpha) w_g sqrt(p_g))| > lambda alpha v_i
+
+Violating variables are added back to the optimization set and the fit is
+repeated (Algorithm 1).  The check runs vectorized over the complement of the
+optimization set.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .groups import expand
+from .penalties import Penalty, soft_threshold
+
+
+def kkt_violations(grad: jnp.ndarray, penalty: Penalty, lam,
+                   opt_mask: jnp.ndarray) -> jnp.ndarray:
+    """[p] bool — True where a variable *outside* ``opt_mask`` violates KKT."""
+    g, alpha = penalty.g, penalty.alpha
+    if penalty.adaptive:
+        w_g = expand(penalty.w, g) * g.sqrt_sizes[g.group_id]
+        rhs = lam * alpha * penalty.v
+    else:
+        w_g = g.sqrt_sizes[g.group_id]
+        rhs = lam * alpha
+    lhs = jnp.abs(soft_threshold(grad, lam * (1.0 - alpha) * w_g))
+    viol = lhs > rhs + 1e-10
+    return viol & (~opt_mask)

@@ -1,0 +1,188 @@
+"""Sparse-group lasso and adaptive sparse-group lasso penalties.
+
+Implements the SGL norm (paper Eq. 2), the aSGL norm (Eq. 18), their dual
+norms via the epsilon-norm decomposition (Eqs. 3/4 and 19), and the exact
+proximal operators used by the solvers.
+
+The prox of ``t * lambda * ||.||_sgl`` composes exactly (Simon et al. 2013):
+soft-threshold at ``t*lambda*alpha`` then group-soft-threshold at
+``t*lambda*(1-alpha)*sqrt(p_g)``.  The weighted (aSGL) version composes the
+same way with per-variable weights ``v_i`` and per-group weights ``w_g``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .groups import GroupInfo, expand, group_l2, segment_sum, to_padded
+from .epsilon_norm import epsilon_norm, epsilon_dual_norm
+
+
+def soft_threshold(x: jnp.ndarray, t) -> jnp.ndarray:
+    """S(x, t) = sign(x) (|x| - t)_+ (elementwise)."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SGL
+# ---------------------------------------------------------------------------
+
+def sgl_norm(beta: jnp.ndarray, g: GroupInfo, alpha: float) -> jnp.ndarray:
+    """alpha ||b||_1 + (1 - alpha) sum_g sqrt(p_g) ||b^(g)||_2 (Eq. 2)."""
+    l1 = jnp.sum(jnp.abs(beta))
+    gl2 = jnp.sum(g.sqrt_sizes * group_l2(beta, g))
+    return alpha * l1 + (1.0 - alpha) * gl2
+
+
+def sgl_tau(g: GroupInfo, alpha: float) -> jnp.ndarray:
+    """tau_g = alpha + (1 - alpha) sqrt(p_g) (Eq. 3)."""
+    return alpha + (1.0 - alpha) * g.sqrt_sizes
+
+
+def sgl_eps(g: GroupInfo, alpha: float) -> jnp.ndarray:
+    """eps_g = (tau_g - alpha) / tau_g (Sec. 2.2)."""
+    tau = sgl_tau(g, alpha)
+    return (tau - alpha) / tau
+
+
+def sgl_dual_norm(z: jnp.ndarray, g: GroupInfo, alpha: float,
+                  method: str = "exact") -> jnp.ndarray:
+    """||z||*_sgl = max_g tau_g^{-1} ||z^(g)||_{eps_g} (Eq. 4)."""
+    zp, mask = to_padded(z, g)
+    eps = sgl_eps(g, alpha)
+    en = epsilon_norm(zp, eps, mask, method=method)
+    return jnp.max(en / sgl_tau(g, alpha))
+
+
+def sgl_group_epsilon_norms(z: jnp.ndarray, g: GroupInfo, alpha: float,
+                            method: str = "exact") -> jnp.ndarray:
+    """Per-group ||z^(g)||_{eps_g} -> [m] (screening statistic, Eq. 5)."""
+    zp, mask = to_padded(z, g)
+    return epsilon_norm(zp, sgl_eps(g, alpha), mask, method=method)
+
+
+def sgl_prox(z: jnp.ndarray, t, g: GroupInfo, alpha: float) -> jnp.ndarray:
+    """prox_{t ||.||_sgl}(z), exact composition (Simon et al. 2013).
+
+    1. u   = S(z, t * alpha)
+    2. out = max(0, 1 - t (1-alpha) sqrt(p_g) / ||u^(g)||_2) * u
+    """
+    u = soft_threshold(z, t * alpha)
+    norms = group_l2(u, g)                       # [m]
+    thr = t * (1.0 - alpha) * g.sqrt_sizes       # [m]
+    scale = jnp.where(norms > 0, jnp.maximum(0.0, 1.0 - thr / jnp.where(norms > 0, norms, 1.0)), 0.0)
+    return expand(scale, g) * u
+
+
+# ---------------------------------------------------------------------------
+# aSGL (adaptive weights v [p], w [m])
+# ---------------------------------------------------------------------------
+
+def asgl_norm(beta: jnp.ndarray, g: GroupInfo, alpha: float,
+              v: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """alpha sum v_i |b_i| + (1 - alpha) sum_g w_g sqrt(p_g) ||b^(g)||_2 (Eq. 18)."""
+    l1 = jnp.sum(v * jnp.abs(beta))
+    gl2 = jnp.sum(w * g.sqrt_sizes * group_l2(beta, g))
+    return alpha * l1 + (1.0 - alpha) * gl2
+
+
+def asgl_gamma_eps(beta: jnp.ndarray, g: GroupInfo, alpha: float,
+                   v: jnp.ndarray, w: jnp.ndarray):
+    """gamma_g and eps'_g of the aSGL epsilon-norm decomposition (Eq. 19).
+
+    Simplification used (see DESIGN.md): the cross term satisfies
+
+        sum_{i != j} v_j |b_i| = ||v||_1 ||b||_1 - sum_i v_i |b_i|,
+
+    so ``gamma_g = alpha * <v, |b|>_g / ||b^(g)||_1 + (1-alpha) w_g sqrt(p_g)``
+    — the |b|-weighted mean of v plus the group part.  For ||b^(g)||_1 = 0 the
+    L'Hopital limit gives the unweighted mean ``alpha * ||v^(g)||_1 / p_g``
+    (Appendix B.1.1).
+    """
+    ab = jnp.abs(beta)
+    b_l1 = segment_sum(ab, g)                   # [m]
+    vb = segment_sum(v * ab, g)                 # [m]
+    v_l1 = segment_sum(v, g)                    # [m]
+    mean_v = jnp.where(b_l1 > 0, vb / jnp.where(b_l1 > 0, b_l1, 1.0),
+                       v_l1 / g.sizes.astype(vb.dtype))
+    group_part = (1.0 - alpha) * w * g.sqrt_sizes
+    gamma = alpha * mean_v + group_part
+    eps = group_part / jnp.where(gamma > 0, gamma, 1.0)
+    return gamma, eps
+
+
+def asgl_group_epsilon_norms(z: jnp.ndarray, beta: jnp.ndarray, g: GroupInfo,
+                             alpha: float, v: jnp.ndarray, w: jnp.ndarray,
+                             method: str = "exact"):
+    """Per-group ||z^(g)||_{eps'_g} plus (gamma, eps') (screening stat, Eq. 7)."""
+    gamma, eps = asgl_gamma_eps(beta, g, alpha, v, w)
+    zp, mask = to_padded(z, g)
+    return epsilon_norm(zp, eps, mask, method=method), gamma, eps
+
+
+def asgl_prox(z: jnp.ndarray, t, g: GroupInfo, alpha: float,
+              v: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """prox_{t ||.||_asgl}(z): weighted soft-threshold then group shrink."""
+    u = soft_threshold(z, t * alpha * v)
+    norms = group_l2(u, g)
+    thr = t * (1.0 - alpha) * w * g.sqrt_sizes
+    scale = jnp.where(norms > 0, jnp.maximum(0.0, 1.0 - thr / jnp.where(norms > 0, norms, 1.0)), 0.0)
+    return expand(scale, g) * u
+
+
+# ---------------------------------------------------------------------------
+# Uniform penalty facade used by solvers / path driver
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class Penalty:
+    """SGL with optional adaptive weights; ``v``/``w`` = None means plain SGL.
+
+    A pytree: ``g``/``v``/``w`` are leaves (GroupInfo itself is a pytree),
+    ``alpha`` is static aux data.
+    """
+
+    def __init__(self, g: GroupInfo, alpha: float, v=None, w=None):
+        self.g = g
+        self.alpha = float(alpha)
+        self.v = v
+        self.w = w
+
+    def tree_flatten(self):
+        return (self.g, self.v, self.w), (self.alpha,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        g, v, w = leaves
+        return cls(g, aux[0], v, w)
+
+    @property
+    def adaptive(self) -> bool:
+        return self.v is not None
+
+    def value(self, beta):
+        if self.adaptive:
+            return asgl_norm(beta, self.g, self.alpha, self.v, self.w)
+        return sgl_norm(beta, self.g, self.alpha)
+
+    def prox(self, z, t):
+        if self.adaptive:
+            return asgl_prox(z, t, self.g, self.alpha, self.v, self.w)
+        return sgl_prox(z, t, self.g, self.alpha)
+
+    def dual_norm(self, z, method: str = "exact"):
+        if self.adaptive:
+            raise ValueError("aSGL dual norm is beta-dependent; use the path-start solver")
+        return sgl_dual_norm(z, self.g, self.alpha, method=method)
+
+    # split prox pieces for three-operator splitting (ATOS): l1 part and group part
+    def prox_l1(self, z, t):
+        v = self.v if self.adaptive else 1.0
+        return soft_threshold(z, t * self.alpha * v)
+
+    def prox_group(self, z, t):
+        w = self.w if self.adaptive else 1.0
+        norms = group_l2(z, self.g)
+        thr = t * (1.0 - self.alpha) * w * self.g.sqrt_sizes
+        scale = jnp.where(norms > 0, jnp.maximum(0.0, 1.0 - thr / jnp.where(norms > 0, norms, 1.0)), 0.0)
+        return expand(scale, self.g) * z

@@ -1,0 +1,153 @@
+"""Screening rules: DFR (the paper), sparsegl, and GAP-safe.
+
+All rules consume the gradient at the previous path point ``grad_k`` =
+``grad f(beta_hat(lambda_k))`` ([p]) and produce boolean keep-masks.
+
+DFR-SGL (paper Eqs. 5/6):
+  groups:    keep g   iff ||grad_k^(g)||_{eps_g} >  tau_g (2 l_{k+1} - l_k)
+  variables: keep i   iff |grad_k_i|             >  alpha (2 l_{k+1} - l_k)
+             (only for i in kept groups; union with previous active set)
+
+DFR-aSGL (Eqs. 7/8): tau_g -> gamma_g, eps_g -> eps'_g, alpha -> alpha v_i,
+with (gamma, eps') evaluated at beta_hat(lambda_k) (Eq. 19).
+
+sparsegl (Liang et al. 2022; Appendix C): group-only strong rule
+  discard g iff ||S(grad_k^(g), l_{k+1} alpha)||_2 <= sqrt(p_g)(1-alpha)(2 l_{k+1} - l_k)
+
+GAP-safe (Ndiaye et al. 2016; Appendix C): exact sphere test from the duality
+gap; sequential and dynamic variants (linear loss only).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .groups import GroupInfo, expand, group_l2, group_linf, to_padded
+from .epsilon_norm import epsilon_norm
+from .penalties import (Penalty, asgl_group_epsilon_norms, soft_threshold,
+                        sgl_eps, sgl_group_epsilon_norms, sgl_tau)
+
+
+class ScreenResult(NamedTuple):
+    keep_groups: jnp.ndarray     # [m] bool — candidate group set C_g
+    keep_vars: jnp.ndarray       # [p] bool — candidate variable set C_v
+
+
+# ---------------------------------------------------------------------------
+# DFR — the paper's rule
+# ---------------------------------------------------------------------------
+
+def dfr_screen(grad_k: jnp.ndarray, penalty: Penalty, lam_k, lam_next,
+               method: str = "exact") -> ScreenResult:
+    """Bi-level strong screening for SGL/aSGL (paper Sec. 2.3 / 2.5).
+
+    For aSGL the caller must pass ``beta_k`` via :func:`dfr_screen_asgl`.
+    """
+    if penalty.adaptive:
+        raise ValueError("use dfr_screen_asgl for adaptive penalties")
+    g, alpha = penalty.g, penalty.alpha
+    thresh = 2.0 * lam_next - lam_k
+    en = sgl_group_epsilon_norms(grad_k, g, alpha, method=method)     # [m]
+    keep_groups = en > sgl_tau(g, alpha) * thresh                     # Eq. 5
+    keep_vars = jnp.abs(grad_k) > alpha * thresh                      # Eq. 6
+    keep_vars = keep_vars & expand(keep_groups, g)
+    # alpha == 0 -> group lasso: no variable-level screening (Appendix A.4)
+    if alpha == 0.0:
+        keep_vars = expand(keep_groups, g)
+    return ScreenResult(keep_groups, keep_vars)
+
+
+def dfr_screen_asgl(grad_k: jnp.ndarray, beta_k: jnp.ndarray, penalty: Penalty,
+                    lam_k, lam_next, method: str = "exact") -> ScreenResult:
+    """DFR for aSGL (Eqs. 7/8) with (gamma_g, eps'_g) at beta_hat(lambda_k)."""
+    g, alpha, v, w = penalty.g, penalty.alpha, penalty.v, penalty.w
+    thresh = 2.0 * lam_next - lam_k
+    en, gamma, _ = asgl_group_epsilon_norms(grad_k, beta_k, g, alpha, v, w,
+                                            method=method)
+    keep_groups = en > gamma * thresh                                 # Eq. 7
+    keep_vars = jnp.abs(grad_k) > alpha * v * thresh                  # Eq. 8
+    keep_vars = keep_vars & expand(keep_groups, g)
+    if alpha == 0.0:
+        keep_vars = expand(keep_groups, g)
+    return ScreenResult(keep_groups, keep_vars)
+
+
+def screen(grad_k, beta_k, penalty: Penalty, lam_k, lam_next,
+           method: str = "exact") -> ScreenResult:
+    """Dispatch on penalty adaptivity."""
+    if penalty.adaptive:
+        return dfr_screen_asgl(grad_k, beta_k, penalty, lam_k, lam_next, method)
+    return dfr_screen(grad_k, penalty, lam_k, lam_next, method)
+
+
+# ---------------------------------------------------------------------------
+# sparsegl — group-only strong rule (comparison baseline)
+# ---------------------------------------------------------------------------
+
+def sparsegl_screen(grad_k: jnp.ndarray, penalty: Penalty, lam_k, lam_next) -> ScreenResult:
+    g, alpha = penalty.g, penalty.alpha
+    w = penalty.w if penalty.adaptive else jnp.ones((g.m,), grad_k.dtype)
+    st = soft_threshold(grad_k, lam_next * alpha)
+    lhs = group_l2(st, g)
+    rhs = w * g.sqrt_sizes * (1.0 - alpha) * (2.0 * lam_next - lam_k)
+    keep_groups = lhs > rhs
+    keep_vars = expand(keep_groups, g)     # whole surviving groups enter
+    return ScreenResult(keep_groups, keep_vars)
+
+
+# ---------------------------------------------------------------------------
+# GAP safe — exact sphere rule (linear loss; Appendix C)
+# ---------------------------------------------------------------------------
+# Internally uses the unscaled formulation  min 1/2||y - Xb||^2 + lam_u Om(b)
+# with lam_u = n * lam, matching Ndiaye et al.; the caller passes the
+# 1/(2n)-scaled lambda used everywhere else.
+
+def _gap_dual_point(X, y, beta, lam_u, penalty: Penalty, method: str = "exact"):
+    r = y - X @ beta
+    xtr = X.T @ r
+    # ||X^T r||*_sgl via the epsilon-norm (Eq. 4)
+    g, alpha = penalty.g, penalty.alpha
+    zp, mask = to_padded(xtr, g)
+    en = epsilon_norm(zp, sgl_eps(g, alpha), mask, method=method)
+    dual = jnp.max(en / sgl_tau(g, alpha))
+    theta = r / jnp.maximum(lam_u, dual)
+    return theta, r
+
+
+def _gap_radius(X, y, beta, theta, lam_u, penalty: Penalty):
+    r = y - X @ beta
+    primal = 0.5 * jnp.dot(r, r) + lam_u * penalty.value(beta)
+    dual_obj = 0.5 * jnp.dot(y, y) - 0.5 * lam_u**2 * jnp.dot(theta - y / lam_u, theta - y / lam_u)
+    gap = jnp.maximum(primal - dual_obj, 0.0)
+    return jnp.sqrt(2.0 * gap) / lam_u
+
+
+def gap_safe_screen(X, y, beta_ref, penalty: Penalty, lam,
+                    method: str = "exact") -> ScreenResult:
+    """Sequential GAP-safe sphere test at ``lam`` using primal point ``beta_ref``.
+
+    Exact: never discards an active variable (up to numerical tolerance).
+    """
+    n = X.shape[0]
+    lam_u = lam * n
+    g, alpha = penalty.g, penalty.alpha
+    theta, _ = _gap_dual_point(X, y, beta_ref, lam_u, penalty, method)
+    r_rad = _gap_radius(X, y, beta_ref, theta, lam_u, penalty)
+
+    xt_theta = X.T @ theta                     # [p]
+    col_norms = jnp.sqrt(jnp.sum(X * X, axis=0))
+    # variable test (Eq. 30): |x_j' theta| + r ||x_j|| <= alpha -> discard
+    keep_vars = jnp.abs(xt_theta) + r_rad * col_norms > alpha
+
+    # group test (Eqs. 31/32); ||X_g|| = Frobenius norm of the group's columns
+    grp_frob = jnp.sqrt(jax.ops.segment_sum(col_norms**2, g.group_id, num_segments=g.m))
+    st = soft_threshold(xt_theta, alpha)
+    t1 = group_l2(st, g) + r_rad * grp_frob
+    linf = group_linf(xt_theta, g)
+    t2 = jnp.maximum(linf + r_rad * grp_frob - alpha, 0.0)
+    T_g = jnp.where(linf > alpha, t1, t2)
+    keep_groups = T_g >= (1.0 - alpha) * g.sqrt_sizes
+    keep_vars = keep_vars & expand(keep_groups, g)
+    return ScreenResult(keep_groups, keep_vars)

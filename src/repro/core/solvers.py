@@ -1,0 +1,178 @@
+"""Proximal solvers for sparse-group objectives: FISTA and ATOS.
+
+Both solve ``min_b f(b) + lam * Omega(b)`` for a :class:`~repro.core.losses.Problem`
+and a :class:`~repro.core.penalties.Penalty`, as jit-compiled fixed-shape
+``lax.while_loop`` iterations (max_iters bound + coefficient-change tolerance,
+paper Table A1: tol 1e-5, backtracking 0.7).
+
+* :func:`fista` — accelerated proximal gradient with the *exact* SGL/aSGL prox
+  (the composition of soft-threshold and group shrink) and Armijo-style
+  backtracking on the smooth part.  Default solver.
+* :func:`atos` — (adaptive) three operator splitting (Davis–Yin; Pedregosa &
+  Gidel 2018), the paper's solver: the l1 and group-l2 penalty parts enter
+  through *separate* proxes.  Kept for fidelity; cross-checked against FISTA
+  in tests.
+
+An unpenalized intercept is handled by exact minimization (linear) or a
+gradient step (logistic) each iteration.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .losses import Problem, loss_value, residual
+from .penalties import Penalty
+
+
+class SolveResult(NamedTuple):
+    beta: jnp.ndarray
+    intercept: jnp.ndarray
+    iters: jnp.ndarray
+    converged: jnp.ndarray
+    step: jnp.ndarray          # final step size (warm-startable)
+
+
+def _grad_and_loss(prob: Problem, beta, c):
+    r = residual(prob, beta, c)
+    g = -(prob.X.T @ r) / prob.X.shape[0]
+    f = loss_value(prob, beta, c)
+    return g, f
+
+
+def _update_intercept(prob: Problem, beta, c):
+    if not prob.intercept:
+        return c
+    eta = prob.X @ beta
+    if prob.loss == "linear":
+        return jnp.mean(prob.y - eta)
+    # logistic: a few Newton steps on the (1-d, convex) intercept problem
+    def body(_, c):
+        p_hat = jax.nn.sigmoid(eta + c)
+        g = jnp.mean(p_hat - prob.y)
+        h = jnp.maximum(jnp.mean(p_hat * (1 - p_hat)), 1e-6)
+        return c - g / h
+    return jax.lax.fori_loop(0, 4, body, c)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "max_bt"))
+def fista(prob: Problem, penalty: Penalty, lam, beta0, c0=0.0, step0=1.0,
+          max_iters: int = 5000, tol: float = 1e-5, bt: float = 0.7,
+          max_bt: int = 100) -> SolveResult:
+    """FISTA with backtracking and adaptive restart (O'Donoghue–Candès)."""
+
+    lam = jnp.asarray(lam, beta0.dtype)
+
+    class S(NamedTuple):
+        beta: jnp.ndarray
+        z: jnp.ndarray        # momentum point
+        t: jnp.ndarray        # momentum scalar
+        c: jnp.ndarray
+        step: jnp.ndarray
+        it: jnp.ndarray
+        delta: jnp.ndarray    # last relative coefficient change
+
+    def cond(s: S):
+        return (s.it < max_iters) & (s.delta > tol)
+
+    def body(s: S):
+        c = _update_intercept(prob, s.z, s.c)
+        g, f = _grad_and_loss(prob, s.z, c)
+        # backtracking line search on the smooth part at the momentum point
+        def bt_cond(carry):
+            step, it = carry
+            b_new = penalty.prox(s.z - step * g, step * lam)
+            d = b_new - s.z
+            f_new = loss_value(prob, b_new, c)
+            ub = f + jnp.dot(g, d) + 0.5 * jnp.dot(d, d) / step
+            # relative slack: the f32 rounding noise of the loss evaluation
+            # would otherwise trigger endless backtracking near convergence
+            slack = 1e-6 * jnp.abs(f) + 1e-10
+            return (f_new > ub + slack) & (it < max_bt)
+
+        step, _ = jax.lax.while_loop(bt_cond, lambda cr: (cr[0] * bt, cr[1] + 1),
+                                     (s.step, jnp.array(0)))
+        beta_new = penalty.prox(s.z - step * g, step * lam)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t**2))
+        z_new = beta_new + ((s.t - 1.0) / t_new) * (beta_new - s.beta)
+        # adaptive restart on non-monotone progress
+        restart = jnp.dot(s.z - beta_new, beta_new - s.beta) > 0
+        z_new = jnp.where(restart, beta_new, z_new)
+        t_new = jnp.where(restart, 1.0, t_new)
+        denom = jnp.maximum(jnp.max(jnp.abs(beta_new)), 1.0)
+        delta = jnp.max(jnp.abs(beta_new - s.beta)) / denom
+        # monotone non-increasing step: re-growing it is unsafe once the
+        # acceptance test is rounding-noise dominated near convergence
+        return S(beta_new, z_new, t_new, c, step, s.it + 1, delta)
+
+    s0 = S(beta0, beta0, jnp.array(1.0, beta0.dtype), jnp.asarray(c0, beta0.dtype),
+           jnp.asarray(step0, beta0.dtype), jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
+    s = jax.lax.while_loop(cond, body, s0)
+    return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "max_bt"))
+def atos(prob: Problem, penalty: Penalty, lam, beta0, c0=0.0, step0=1.0,
+         max_iters: int = 5000, tol: float = 1e-5, bt: float = 0.7,
+         max_bt: int = 100) -> SolveResult:
+    """Adaptive three operator splitting (Davis–Yin + PG18 backtracking).
+
+    Splitting: f smooth; g = lam*alpha*||.||_1 (or weighted); h = group part.
+    """
+    lam = jnp.asarray(lam, beta0.dtype)
+
+    class S(NamedTuple):
+        z: jnp.ndarray
+        beta: jnp.ndarray
+        c: jnp.ndarray
+        step: jnp.ndarray
+        it: jnp.ndarray
+        delta: jnp.ndarray
+
+    def cond(s: S):
+        return (s.it < max_iters) & (s.delta > tol)
+
+    def body(s: S):
+        x_g = penalty.prox_group(s.z, s.step * lam)
+        # dual-variable form: w = (z - x_g)/step stays valid when the step
+        # changes (PG18's rescaling); naive Davis-Yin breaks under adaptive
+        # steps because z is implicitly scaled by the step.
+        w = (s.z - x_g) / s.step
+        c = _update_intercept(prob, x_g, s.c)
+        grad, f = _grad_and_loss(prob, x_g, c)
+
+        def bt_cond(carry):
+            step, it = carry
+            x_h = penalty.prox_l1(x_g - step * (w + grad), step * lam)
+            d = x_h - x_g
+            f_h = loss_value(prob, x_h, c)
+            ub = f + jnp.dot(grad, d) + 0.5 * jnp.dot(d, d) / step
+            slack = 1e-6 * jnp.abs(f) + 1e-10
+            return (f_h > ub + slack) & (it < max_bt)
+
+        step, _ = jax.lax.while_loop(bt_cond, lambda cr: (cr[0] * bt, cr[1] + 1),
+                                     (s.step, jnp.array(0)))
+        x_h = penalty.prox_l1(x_g - step * (w + grad), step * lam)
+        z_new = x_h + step * w
+        denom = jnp.maximum(jnp.max(jnp.abs(x_h)), 1.0)
+        delta = jnp.maximum(jnp.max(jnp.abs(x_h - s.beta)),
+                            jnp.max(jnp.abs(x_h - x_g))) / denom
+        return S(z_new, x_h, c, step, s.it + 1, delta)
+
+    s0 = S(beta0, beta0, jnp.asarray(c0, beta0.dtype),
+           jnp.asarray(step0, beta0.dtype), jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
+    s = jax.lax.while_loop(cond, body, s0)
+    return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step)
+
+
+SOLVERS = {"fista": fista, "atos": atos}
+
+
+def solve(prob: Problem, penalty: Penalty, lam, beta0=None, c0=0.0,
+          solver: str = "fista", **kw) -> SolveResult:
+    if beta0 is None:
+        beta0 = jnp.zeros((prob.p,), prob.X.dtype)
+    return SOLVERS[solver](prob, penalty, lam, beta0, c0, **kw)

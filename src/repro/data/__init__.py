@@ -1,0 +1,4 @@
+"""Data layer: paper-faithful synthetic generators, Table A37 stand-ins, LM tokens."""
+from .synthetic import make_synthetic, make_interactions, Synthetic
+from .realdata import standin, TABLE_A37
+from .tokens import TokenPipeline, reshard

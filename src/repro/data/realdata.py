@@ -1,0 +1,67 @@
+"""Real-dataset *shape stand-ins* (no network access in this container).
+
+Generates synthetic data with the exact (n, p, m, group-size range,
+response-type) signature of each dataset in the paper's Table A37, with
+sparse planted signal, so the benchmark exercises identical shape/sparsity
+regimes.  Clearly labeled as stand-ins in EXPERIMENTS.md — improvement
+factors are comparable, absolute statistical results are not.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.groups import GroupInfo
+from ..core.losses import standardize
+from .synthetic import Synthetic, _group_sizes
+
+# name: (p, n, m, size_lo, size_hi, loss)   — paper Table A37
+TABLE_A37 = {
+    "brca1":         (17322, 536, 243, 1, 6505, "linear"),
+    "scheetz":       (18975, 120, 85, 1, 6274, "linear"),
+    "trust-experts": (101, 9759, 7, 4, 51, "linear"),
+    "adenoma":       (18559, 64, 313, 1, 741, "logistic"),
+    "celiac":        (14657, 132, 276, 1, 617, "logistic"),
+    "tumour":        (18559, 52, 313, 1, 741, "logistic"),
+}
+
+
+def _skewed_sizes(rng, p, m, lo, hi):
+    """Table A37 groupings are heavy-tailed (a few huge pathways)."""
+    raw = rng.pareto(1.2, size=m) + 1.0
+    sizes = np.maximum(lo, np.minimum(hi, (raw / raw.sum() * p)).astype(np.int64))
+    while sizes.sum() != p:
+        i = rng.integers(m)
+        if sizes.sum() < p and sizes[i] < hi:
+            sizes[i] += 1
+        elif sizes.sum() > p and sizes[i] > lo:
+            sizes[i] -= 1
+    return sizes
+
+
+def standin(name: str, seed: int = 0, scale: float = 1.0) -> Synthetic:
+    """A stand-in with Table A37's signature; ``scale`` shrinks (n, p, m)
+    proportionally for smoke benchmarks."""
+    p, n, m, lo, hi, loss = TABLE_A37[name]
+    if scale != 1.0:
+        p = max(20, int(p * scale))
+        n = max(16, int(n * scale))
+        m = max(2, int(m * scale))
+        hi = min(hi, max(lo + 1, p // 2))
+    rng = np.random.default_rng(seed)
+    if hi - lo > 100:
+        sizes = _skewed_sizes(rng, p, m, lo, hi)
+    else:
+        sizes = _group_sizes(rng, p, m, lo, hi)
+    g = GroupInfo.from_sizes(sizes)
+    X = rng.normal(size=(n, p))
+    beta = np.zeros(p)
+    k = max(1, int(0.02 * m))
+    off = np.concatenate([[0], np.cumsum(sizes)])
+    for gi in rng.choice(m, k, replace=False):
+        s = sizes[gi]
+        nz = max(1, s // 10)
+        beta[off[gi] + rng.choice(s, nz, replace=False)] = rng.normal(0, 2, nz)
+    eta = X @ beta + rng.normal(0, 1, n)
+    y = eta if loss == "linear" else (rng.uniform(size=n) < 1 / (1 + np.exp(-eta))).astype(float)
+    X = standardize(X)
+    return Synthetic(X.astype(np.float32), y.astype(np.float32), beta, g, loss)

@@ -1,0 +1,59 @@
+"""Deterministic LM token pipeline with exact checkpoint-resume.
+
+A production data layer must (a) never repeat or skip a batch across
+preemptions and (b) be cheap to reshard when the data-parallel world size
+changes.  Both follow from making the pipeline a *pure function of the step
+counter*: batch(step) = hash(seed, step, shard).  No iterator state is
+checkpointed — restoring `step` restores the pipeline.
+
+The synthetic stream is a mixture of Zipf-distributed unigrams and repeated
+n-gram motifs so models see learnable (compressible) structure, not uniform
+noise; real deployments swap `synthetic_batch` for an array-record reader
+with the same (seed, step, shard) -> batch contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1          # data-parallel shards
+    shard: int = 0
+
+    @property
+    def shard_batch(self) -> int:
+        assert self.global_batch % self.n_shards == 0
+        return self.global_batch // self.n_shards
+
+    def batch(self, step: int) -> dict:
+        """Tokens + next-token labels for ``step`` (numpy, host-side)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        b, s, v = self.shard_batch, self.seq_len, self.vocab
+        # Zipf unigrams (clipped to vocab)
+        toks = rng.zipf(1.3, size=(b, s + 1)).astype(np.int64)
+        toks = np.minimum(toks, v - 1)
+        # inject repeated motifs (learnable bigram structure)
+        motif = rng.integers(0, v, size=(8,))
+        pos = rng.integers(0, max(1, s - 8), size=(b,))
+        for i in range(b):
+            toks[i, pos[i]:pos[i] + 8] = motif
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def jax_batch(self, step: int) -> dict:
+        return {k: jnp.asarray(x) for k, x in self.batch(step).items()}
+
+
+def reshard(pipe: TokenPipeline, n_shards: int, shard: int) -> TokenPipeline:
+    """Elastic re-sharding: same stream, new world size (used on restart)."""
+    return dataclasses.replace(pipe, n_shards=n_shards, shard=shard)

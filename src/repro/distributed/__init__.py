@@ -1,0 +1,2 @@
+"""Distribution layer: sharding plans, gradient compression, distributed SGL."""
+from .sharding import MeshPlan

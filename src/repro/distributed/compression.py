@@ -1,0 +1,48 @@
+"""Cross-pod gradient compression: int8 quantization + error feedback.
+
+The multi-pod mesh pays one gradient all-reduce across the pod axis per step
+(DP over pods).  At 50 GB/s/link ICI this is the slowest collective in the
+train step, so it is the one worth compressing:
+
+  scale   = psum_max(|g + err|) / 127          (one scalar per tensor)
+  q       = round((g + err) / scale)  : int8
+  wire    = psum(q) in int16                   (sum of 2 pods fits easily)
+  g_hat   = wire * scale / n_pods
+  err'    = (g + err) - q * scale              (error feedback, kept local)
+
+Error feedback makes the scheme convergent (the quantization residual is
+re-injected next step); the wire dtype (int16 vs f32) is visible in the
+compiled HLO, so the §Perf collective term shows the 2x reduction honestly.
+Used by ``build_compressed_train_step`` (launch/train.py --compress-grads).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def compressed_psum(g, err, axis_name: str):
+    """Inside shard_map over ``axis_name``: returns (mean-reduced g_hat, err')."""
+    n = jax.lax.psum(1, axis_name)
+    x = g.astype(jnp.float32) + err
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    wire = jax.lax.psum(q.astype(jnp.int16), axis_name)      # 2 bytes on wire
+    g_hat = wire.astype(jnp.float32) * scale / n
+    new_err = x - q * scale
+    return g_hat.astype(g.dtype), new_err
+
+
+def compressed_psum_tree(grads, errs, axis_name: str):
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errs)
+    out = [compressed_psum(g, e, axis_name) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,173 @@
+"""Sharding rules for the architecture zoo on the production mesh.
+
+Baseline plan (paper-faithful distribution = standard 2D FSDP x TP; the
+hillclimb in EXPERIMENTS.md §Perf iterates on these):
+
+* 2-D matmul weights: P(fsdp_axis, tp_axis) — FSDP over "data" (and "pod"
+  when multi-pod via gradient all-reduce), TP over "model".  Stacked layer
+  arrays get a leading None.
+* Activations at block boundaries: batch over ("pod","data") when divisible,
+  else sequence over "data" (long_500k's B=1).
+* Decode KV cache: batch over data, *sequence over model* — decode attention
+  becomes a GSPMD-partitioned softmax (flash-decoding-style merge emerges as
+  all-reduces over the model axis).
+* Logits: vocab over "model" (sharded log-softmax).
+
+``MeshPlan.shard`` is handed to forward()/decode_step() as the `shard`
+callback; `param_specs` walks the abstract param tree by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    mesh: Mesh
+    batch_axes: tuple            # ("data",) or ("pod","data")
+    tp_axis: str = "model"
+    fsdp_axis: str = "data"
+    seq_mode: bool = False       # shard sequence (B==1 cells) instead of batch
+    logits_tp: bool = True
+    # Megatron-SP: between blocks, shard the SEQUENCE over the TP axis too —
+    # the row-parallel all-reduce decomposes into reduce-scatter + all-gather
+    # (less wire, and the resident activation is 1/tp the size)
+    act_sp: bool = False
+    # drop per-block activation constraints entirely (GSPMD free propagation)
+    act_free: bool = False
+
+    @staticmethod
+    def for_cell(mesh: Mesh, cell: Optional[ShapeCell] = None) -> "MeshPlan":
+        axes = mesh.axis_names
+        batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+        data_size = 1
+        for a in batch_axes:
+            data_size *= mesh.shape[a]
+        seq_mode = bool(cell and cell.global_batch % data_size != 0)
+        return MeshPlan(mesh, batch_axes, seq_mode=seq_mode)
+
+    # -- named shardings -------------------------------------------------
+    def ns(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    def _axis_size(self, entry) -> int:
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def fit_ns(self, shape, *spec) -> NamedSharding:
+        """Drop sharding on dims the mesh axes don't divide (jit args must
+        divide exactly; e.g. hymba's vocab=32001, hubert's 504)."""
+        fitted = []
+        for dim, entry in zip(shape, spec):
+            if entry is None or dim % self._axis_size(entry) != 0:
+                fitted.append(None)
+            else:
+                fitted.append(entry)
+        return self.ns(*fitted)
+
+    @property
+    def data_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _bs_spec(self, B, S):
+        """(batch_dim, seq_dim) sharding for a [B, S, ...] activation."""
+        if B % self.data_size == 0 and B > 1:
+            return self.batch_axes, None
+        if S % self.data_size == 0 and S > 1:
+            return None, self.batch_axes          # B=1 long-context: SP
+        return None, None
+
+    def shard(self, x, kind: str):
+        """The callback handed to model forward/decode."""
+        if kind == "act" and self.act_free:
+            return x
+        if kind in ("act", "logits") and x.ndim == 3:
+            b, s = self._bs_spec(x.shape[0], x.shape[1])
+            last = self.tp_axis if (kind == "logits" and self.logits_tp) else None
+            if kind == "act" and self.act_sp and s is None and last is None \
+                    and x.shape[1] % self.mesh.shape[self.tp_axis] == 0 \
+                    and x.shape[1] > 1:
+                s = self.tp_axis
+            return jax.lax.with_sharding_constraint(x, self.ns(b, s, last))
+        return x
+
+    # -- input/batch sharding --------------------------------------------
+    def batch_specs(self, tree):
+        def spec_for(x):
+            if x.ndim >= 2:
+                b, s = self._bs_spec(x.shape[0], x.shape[1])
+                return self.fit_ns(x.shape, b, s, *([None] * (x.ndim - 2)))
+            return self.ns()
+        return jax.tree_util.tree_map(spec_for, tree)
+
+    # -- parameter sharding ----------------------------------------------
+    def param_specs(self, cfg: ModelConfig, params_abs):
+        tp, fs = self.tp_axis, self.fsdp_axis
+
+        def rule(path, x):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            nd = x.ndim
+            stacked = any(getattr(p, "key", "") == "blocks" for p in path)
+            lead = (None,) if stacked else ()
+            if name == "embed":
+                return self.fit_ns(x.shape, tp, fs)
+            if name == "lm_head":
+                return self.fit_ns(x.shape, fs, tp)
+            if name == "final_norm":
+                return self.ns(None)
+            core = nd - len(lead)
+            if core == 1:                       # norms, biases, scalars per layer
+                return self.ns(*lead, None)
+            if core == 2:
+                # contract-out weights ([f, d], [Hd, d]) reverse the axes so
+                # the contraction dim is TP-sharded (Megatron row-parallel)
+                if name in ("wo", "md", "cv"):
+                    return self.fit_ns(x.shape, *lead, tp, fs)
+                if name in ("mu", "mu_c", "u"):  # small mix tables
+                    return self.ns(*lead, None, None)
+                return self.fit_ns(x.shape, *lead, fs, tp)
+            if core == 3:                       # MoE experts [E, d, f] / [E, f, d]
+                if name == "ed":
+                    return self.fit_ns(x.shape, *lead, None, tp, fs)
+                return self.fit_ns(x.shape, *lead, None, fs, tp)
+            return self.ns(*([None] * nd))
+
+        return jax.tree_util.tree_map_with_path(rule, params_abs)
+
+    def opt_specs(self, cfg: ModelConfig, params_abs):
+        ps = self.param_specs(cfg, params_abs)
+        from ..train.optim import OptState
+        return OptState(ps, ps, self.ns())
+
+    # -- cache sharding ----------------------------------------------------
+    def cache_specs(self, cfg: ModelConfig, cache_abs):
+        def rule(path, x):
+            B = x.shape[1] if x.ndim >= 2 else 1
+            b_ax = self.batch_axes if (B > 1 and B % self.data_size == 0) else None
+            name = ".".join(str(getattr(p, "key", p)) for p in path)
+            if x.ndim == 5 and "kv" in name:        # [L,B,C,K,D] ring cache
+                return self.fit_ns(x.shape, None, b_ax, self.tp_axis, None, None)
+            if x.ndim == 3 and "pos" in name:       # [L,B,C]
+                return self.fit_ns(x.shape, None, b_ax, self.tp_axis)
+            if x.ndim == 5 and "wkv" in name:       # [L,B,H,N,N] rwkv state
+                return self.fit_ns(x.shape, None, b_ax, self.tp_axis, None, None)
+            if x.ndim == 4 and "ssm" in name:       # [L,B,di,N]
+                return self.fit_ns(x.shape, None, b_ax, self.tp_axis, None)
+            if x.ndim == 3:                          # [L,B,d] shift states
+                return self.fit_ns(x.shape, None, b_ax, self.tp_axis)
+            return self.ns(*([None] * x.ndim))
+
+        return jax.tree_util.tree_map_with_path(rule, cache_abs)

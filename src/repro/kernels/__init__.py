@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's screening hot spots.
+
+kernels/
+  epsilon_norm.py  batched Burdakov eps-norm (bisection in VMEM)   — Eq. 5
+  sgl_prox.py      fused soft-threshold + group-shrink prox        — Eq. 1
+  group_norms.py   fused per-group screening statistics            — Eqs. 5/17/29
+  xt_resid.py      blocked X^T r gradient matvec                   — grad f
+  ops.py           jit'd wrappers (flat-vector entry points)
+  ref.py           pure-jnp oracles
+
+Validated with interpret=True on CPU; BlockSpecs are lane-aligned (128) and
+sublane-aligned (8) for TPU.
+"""
+from .ops import (group_epsilon_norms, sgl_screen_norms, sgl_prox_flat,
+                  group_screen_stats, screen_gradient)

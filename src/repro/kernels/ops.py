@@ -1,0 +1,66 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=None`` (default) resolves to interpret-mode off TPU so the same
+call sites run on this CPU container (kernel body executed in Python) and
+compile to real Mosaic kernels on TPU.  Flat [p]-vector entry points handle
+GroupInfo padding so the core library can swap between the jnp reference
+implementations and the kernels with one keyword.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.groups import GroupInfo, to_padded, from_padded
+from ..core.penalties import sgl_eps, sgl_tau
+from .epsilon_norm import epsilon_norm_padded
+from .group_norms import group_norms_padded
+from .sgl_prox import sgl_prox_padded
+from .xt_resid import xt_resid
+
+
+def _resolve_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def group_epsilon_norms(z_flat: jnp.ndarray, g: GroupInfo, eps: jnp.ndarray,
+                        *, iters: int = 64, interpret=None) -> jnp.ndarray:
+    """||z^(g)||_{eps_g} for all groups of a flat [p] vector -> [m]."""
+    zp, _ = to_padded(z_flat, g)    # zero padding is exact for the eps-norm
+    return epsilon_norm_padded(zp, eps, iters=iters,
+                               interpret=_resolve_interpret(interpret))
+
+
+def sgl_screen_norms(grad_flat: jnp.ndarray, g: GroupInfo, alpha: float,
+                     *, interpret=None) -> jnp.ndarray:
+    """DFR group screening statistic (Eq. 5 LHS) via the kernel."""
+    return group_epsilon_norms(grad_flat, g, sgl_eps(g, alpha), interpret=interpret)
+
+
+def sgl_prox_flat(z_flat: jnp.ndarray, t, g: GroupInfo, alpha: float,
+                  v=None, w=None, *, interpret=None) -> jnp.ndarray:
+    """Fused SGL/aSGL prox on a flat [p] vector."""
+    zp, mask = to_padded(z_flat, g)
+    if v is None:
+        t1 = jnp.full(zp.shape, t * alpha, jnp.float32)
+    else:
+        vp, _ = to_padded(v, g)
+        t1 = t * alpha * vp
+    w_eff = jnp.ones((g.m,), jnp.float32) if w is None else w
+    t2 = t * (1.0 - alpha) * w_eff * g.sqrt_sizes
+    out = sgl_prox_padded(zp, t1, t2, interpret=_resolve_interpret(interpret))
+    return from_padded(jnp.where(mask, out, 0.0), g)
+
+
+def group_screen_stats(grad_flat: jnp.ndarray, g: GroupInfo, thr: jnp.ndarray,
+                       *, interpret=None):
+    """(l1, l2, linf, st_l2) per group of a flat gradient."""
+    zp, _ = to_padded(grad_flat, g)
+    return group_norms_padded(zp, thr, interpret=_resolve_interpret(interpret))
+
+
+def screen_gradient(X: jnp.ndarray, r: jnp.ndarray, *, interpret=None) -> jnp.ndarray:
+    """grad f = -X^T r / n via the blocked matvec kernel."""
+    return -xt_resid(X, r, interpret=_resolve_interpret(interpret)) / X.shape[0]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors its kernel's *mathematical* definition with plain
+jax.numpy on the same padded layouts; tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.epsilon_norm import epsilon_norm_exact
+
+
+def epsilon_norm_padded_ref(x: jnp.ndarray, eps: jnp.ndarray) -> jnp.ndarray:
+    """Exact (sorted segment search) epsilon-norm per row of padded [m, d]."""
+    return epsilon_norm_exact(x.astype(jnp.float32), eps.astype(jnp.float32))
+
+
+def sgl_prox_padded_ref(z, t1, t2):
+    z32 = z.astype(jnp.float32)
+    u = jnp.sign(z32) * jnp.maximum(jnp.abs(z32) - t1.astype(jnp.float32), 0.0)
+    nrm = jnp.sqrt(jnp.sum(u * u, axis=-1, keepdims=True))
+    safe = jnp.where(nrm > 0, nrm, 1.0)
+    scale = jnp.where(nrm > 0, jnp.maximum(0.0, 1.0 - t2.astype(jnp.float32)[:, None] / safe), 0.0)
+    return (scale * u).astype(z.dtype)
+
+
+def group_norms_padded_ref(z, thr):
+    a = jnp.abs(z.astype(jnp.float32))
+    l1 = jnp.sum(a, axis=-1)
+    l2 = jnp.sqrt(jnp.sum(a * a, axis=-1))
+    linf = jnp.max(a, axis=-1)
+    st = jnp.maximum(a - thr.astype(jnp.float32)[:, None], 0.0)
+    st_l2 = jnp.sqrt(jnp.sum(st * st, axis=-1))
+    return l1, l2, linf, st_l2
+
+
+def xt_resid_ref(X, r):
+    return (X.astype(jnp.float32).T @ r.astype(jnp.float32))

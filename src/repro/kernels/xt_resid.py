@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: blocked gradient matvec  z = X^T r.
+
+The dominant FLOP cost of a screening pass is the gradient evaluation
+``grad f = -X^T r / n`` — a tall-skinny [p, n] x [n] matvec over the *full*
+input space (screening must look at every feature; only the solve is
+restricted).  The kernel tiles X into (block_n, block_p) VMEM blocks and
+accumulates partial dot products over the n-grid axis while the output block
+stays resident in VMEM; block_p is lane-aligned (128) so the contraction
+feeds the MXU as a (1, bn) x (bn, bp) matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xt_resid_kernel(x_ref, r_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)       # [bn, bp]
+    r = r_ref[...].astype(jnp.float32)       # [bn, 1]
+    out_ref[...] += jnp.dot(r.T, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p", "interpret"))
+def xt_resid(X: jnp.ndarray, r: jnp.ndarray, *, block_n: int = 256,
+             block_p: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """X^T r for X [n, p], r [n] -> [p] (caller applies the -1/n scale)."""
+    n, p = X.shape
+    bn = min(block_n, max(8, -(-n // 8) * 8))
+    bp = min(block_p, max(128, -(-p // 128) * 128))
+    n_pad = -(-n // bn) * bn
+    p_pad = -(-p // bp) * bp
+    Xp = jnp.zeros((n_pad, p_pad), X.dtype).at[:n, :p].set(X)
+    rp = jnp.zeros((n_pad, 1), jnp.float32).at[:n, 0].set(r.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        _xt_resid_kernel,
+        grid=(p_pad // bp, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, k: (k, i)),
+            pl.BlockSpec((bn, 1), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda i, k: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p_pad), jnp.float32),
+        interpret=interpret,
+    )(Xp, rp)
+    return out[0, :p]

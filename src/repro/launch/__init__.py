@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, multi-pod dry-run, training/serving drivers."""
+from .mesh import make_production_mesh, make_local_mesh

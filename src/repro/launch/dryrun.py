@@ -1,0 +1,61 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ the two lines above MUST run before any jax import (device count locks
+#   at first backend init).  512 host devices = the 2x16x16 multi-pod mesh.
+
+import argparse
+import sys
+import traceback
+
+from repro.launch.dryrun_lib import (all_cells, load_results, run_cell,
+                                     save_result)
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile "
+                                 "every (arch x shape x mesh) cell")
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--cell", default=None, help="one shape cell (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default=os.path.abspath(DEFAULT_OUT))
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args(argv)
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results = load_results(args.out)
+
+    cells = [(a, c) for a, c in all_cells()
+             if (args.arch is None or a == args.arch)
+             and (args.cell is None or c == args.cell)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi_pod in meshes:
+        # fresh mesh per pass; single-pod uses the first 256 of 512 devices
+        for arch, cell in cells:
+            key = f"{arch}|{cell}|{'2x16x16' if multi_pod else '16x16'}"
+            if key in results and not args.force:
+                print(f"[dryrun] cached {key}", flush=True)
+                continue
+            try:
+                res = run_cell(arch, cell, multi_pod=multi_pod)
+                save_result(args.out, key, res)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                failures.append((key, repr(e)))
+                save_result(args.out, key, {"arch": arch, "cell": cell,
+                                            "multi_pod": multi_pod,
+                                            "error": repr(e)})
+
+    print(f"\n[dryrun] done: {len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed -> {args.out}")
+    for k, e in failures:
+        print(f"  FAIL {k}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

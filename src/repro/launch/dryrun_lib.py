@@ -1,0 +1,216 @@
+"""Dry-run machinery: lower + compile every (arch x shape x mesh) cell.
+
+No device allocation anywhere — params/optimizer/caches/batches are
+ShapeDtypeStructs.  Results (memory analysis, cost analysis, collective
+bytes parsed from the optimized HLO) are appended incrementally to a JSON
+file so interrupted runs resume.
+
+This module must NOT set XLA flags (dryrun.py does, as its first two lines).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get as get_config
+from ..distributed.sharding import MeshPlan
+from ..models.config import SHAPES, applicable_cells
+from ..models.model import abstract_params, init_cache, param_count
+from ..models.steps import (build_prefill_step, build_serve_step,
+                            build_train_step, input_specs)
+from ..train.optim import init_opt_state
+from .mesh import make_production_mesh
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?((?:\w+\[[^\]]*\](?:\{[^}]*\})?(?:,\s*)?)+)(?:\))?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+               "token": 0, "s4": 1, "u4": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in optimized (SPMD) HLO."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shapes_str, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in SHAPE_RE.finditer(shapes_str):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+def build_sgl_cell(cell_name: str, mesh, gradreuse: bool = False):
+    """The paper's genomics workload on the production mesh."""
+    import dataclasses as _dc
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..configs.sgl_genomics import config as _sgl_config
+    from ..distributed import dist_sgl as D
+
+    cfg = _sgl_config()
+    ns = lambda *s: NamedSharding(mesh, P(*s))
+    sds = jax.ShapeDtypeStruct
+    xdt = jnp.dtype(cfg.x_dtype)
+    X = sds((cfg.n, cfg.p), xdt)
+    y = sds((cfg.n,), jnp.float32)
+    beta = sds((cfg.p,), jnp.float32)
+    lam = sds((), jnp.float32)
+    data_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    if cell_name == "sgl_screen":
+        def fn(X, y, beta, lam_k, lam_next):
+            r = y - X.astype(jnp.float32) @ beta
+            grad = D.dist_gradient(X, r, cfg.n)
+            keep = D.dist_screen(grad, lam_k, lam_next, cfg)
+            viols = D.dist_kkt(grad, lam_next, keep, cfg)
+            return keep, viols
+        args = (X, y, beta, lam, lam)
+        shardings = (ns(data_ax, "model"), ns(data_ax), ns("model"), ns(), ns())
+        return fn, args, shardings, (), cfg, None
+    if cell_name == "sgl_path_step":
+        if gradreuse:
+            fn = lambda X, y, b, lk, ln, g: D.dist_path_step(
+                X, y, b, lk, ln, cfg=cfg, grad=g)
+            args = (X, y, beta, lam, lam, sds((cfg.p,), jnp.float32))
+            shardings = (ns(data_ax, "model"), ns(data_ax), ns("model"),
+                         ns(), ns(), ns("model"))
+        else:
+            fn = partial(D.dist_path_step, cfg=cfg)
+            args = (X, y, beta, lam, lam)
+            shardings = (ns(data_ax, "model"), ns(data_ax), ns("model"), ns(), ns())
+        return fn, args, shardings, (), cfg, None
+    raise ValueError(cell_name)
+
+
+def build_cell(arch: str, cell_name: str, mesh, plan_overrides=None):
+    """(fn, abstract_args, in_shardings, donate) for one cell."""
+    if arch == "sgl_genomics":
+        return build_sgl_cell(cell_name, mesh)
+    cfg = get_config(arch)
+    cell = SHAPES[cell_name]
+    plan = MeshPlan.for_cell(mesh, cell)
+    if plan_overrides:
+        import dataclasses
+        plan = dataclasses.replace(plan, **plan_overrides)
+    params = abstract_params(cfg)
+    pspecs = plan.param_specs(cfg, params)
+    batch = input_specs(cfg, cell)
+    bspecs = plan.batch_specs(batch)
+
+    if cell.kind == "train":
+        fn = build_train_step(cfg, shard=plan.shard)
+        opt = jax.eval_shape(init_opt_state, params)
+        ospecs = plan.opt_specs(cfg, params)
+        return fn, (params, opt, batch), (pspecs, ospecs, bspecs), (0, 1), cfg, plan
+    if cell.kind == "prefill":
+        fn = build_prefill_step(cfg, shard=plan.shard)
+        return fn, (params, batch), (pspecs, bspecs), (), cfg, plan
+    # decode
+    fn = build_serve_step(cfg, shard=plan.shard)
+    cache = jax.eval_shape(lambda: init_cache(cfg, cell.global_batch, cell.seq_len))
+    cspecs = plan.cache_specs(cfg, cache)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params, cache, batch["tokens"], t), \
+        (pspecs, cspecs, bspecs["tokens"], plan.ns()), (1,), cfg, plan
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool, mesh=None,
+             plan_overrides=None, verbose=True) -> dict:
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    fn, args, shardings, donate, cfg, plan = build_cell(
+        arch, cell_name, mesh, plan_overrides)
+
+    t0 = time.perf_counter()
+    jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    def _get(obj, name):
+        try:
+            return int(getattr(obj, name))
+        except Exception:
+            return None
+
+    n_params = (param_count(abstract_params(cfg)) if hasattr(cfg, "n_layers")
+                else cfg.p)
+    result = {
+        "arch": arch, "cell": cell_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "multi_pod": multi_pod, "chips": n_chips,
+        "params": n_params,
+        "flops_per_device": cost.get("flops") if cost else None,
+        "bytes_per_device": cost.get("bytes accessed") if cost else None,
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": _get(mem, "argument_size_in_bytes"),
+            "output_bytes": _get(mem, "output_size_in_bytes"),
+            "temp_bytes": _get(mem, "temp_size_in_bytes"),
+            "alias_bytes": _get(mem, "alias_size_in_bytes"),
+            "code_bytes": _get(mem, "generated_code_size_in_bytes"),
+        },
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        fl = result["flops_per_device"] or 0
+        print(f"[dryrun] {arch:15s} {cell_name:12s} mesh={result['mesh']:9s} "
+              f"flops/dev={fl:.3e} coll={coll['total']:.3e}B "
+              f"compile={t_compile:.1f}s", flush=True)
+    return result
+
+
+def load_results(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_result(path: str, key: str, result: dict):
+    results = load_results(path)
+    results[key] = result
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+def all_cells():
+    from ..configs import ARCHS
+    for arch in ARCHS:
+        for cell in applicable_cells(get_config(arch)):
+            yield arch, cell
+    # the paper's own workload at cluster scale
+    yield "sgl_genomics", "sgl_screen"
+    yield "sgl_genomics", "sgl_path_step"

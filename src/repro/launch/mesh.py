@@ -1,0 +1,20 @@
+"""Production mesh construction (assignment contract).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): 16x16 ("data","model") single pod, or 2x16x16
+("pod","data","model") multi-pod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh for tests on host platform devices."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

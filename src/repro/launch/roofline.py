@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (same contract as dryrun.py)
+
+import argparse
+import dataclasses
+import json
+import sys
+import traceback
+
+import jax
+import numpy as np
+
+from repro.analysis.roofline import CHIPS, analyze_cell
+from repro.configs import ARCHS, get as get_config
+from repro.launch.dryrun_lib import (build_cell, collective_bytes,
+                                     load_results, save_result)
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, applicable_cells
+from repro.models.model import abstract_params, param_count
+
+DEFAULT_OUT = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "roofline.json"))
+
+
+# variant -> (config overrides, step-builder kwargs, analytics impl/param_bytes)
+VARIANTS = {
+    "baseline":   {},
+    # identical to baseline code-wise; distinct key to record the effect of
+    # the sum(g*g) grad-norm fix against the pre-fix baseline rows
+    "fixnorm":    {},
+    # cast matmul weights pre-scan (XLA's excess-precision pass may elide)
+    "bf16gather": {"step": {"cast_early": True}},
+    # bf16 model weights + f32 master in optimizer: every FSDP gather is bf16
+    "bf16params": {"cfg": {"param_dtype": "bfloat16"},
+                   "step": {"master": True}, "param_bytes": 2},
+    # shard_map MoE dispatch: kills the data-replicated capacity buffer
+    "moe_spmd":   {"step": {"moe_spmd": True}, "needs_plan": True},
+    # static-window attention segments: skip out-of-window compute
+    "winattn":    {"step": {"window_static": True}, "impl": "static_window"},
+    # combined winners
+    "opt_moe":    {"cfg": {"param_dtype": "bfloat16"},
+                   "step": {"master": True, "moe_spmd": True},
+                   "needs_plan": True, "param_bytes": 2},
+    "opt_prefill": {"cfg": {"param_dtype": "bfloat16"},
+                    "step": {"master": True, "window_static": True},
+                    "impl": "static_window", "param_bytes": 2},
+    # Megatron-SP activations between blocks
+    "sp":         {"plan": {"act_sp": True}},
+    # unconstrained activations (GSPMD free propagation)
+    "actfree":    {"plan": {"act_free": True}},
+    "opt_prefill_free": {"cfg": {"param_dtype": "bfloat16"},
+                         "step": {"master": True, "window_static": True},
+                         "plan": {"act_free": True},
+                         "impl": "static_window", "param_bytes": 2},
+    "opt_prefill_sp": {"cfg": {"param_dtype": "bfloat16"},
+                       "step": {"master": True, "window_static": True},
+                       "plan": {"act_sp": True},
+                       "impl": "static_window", "param_bytes": 2},
+    "opt_serve":  {"cfg": {"param_dtype": "bfloat16"}, "param_bytes": 2,
+                   "step": {"moe_spmd": True}, "needs_plan": True},
+    # + int8 KV cache (the decode memory term is cache-read dominated)
+    "opt_serve_kv8": {"cfg": {"param_dtype": "bfloat16", "kv_quant": True},
+                      "param_bytes": 2},
+    # sgl_genomics: reuse the KKT-audit gradient as next step's screen grad
+    "gradreuse":  {},
+    # + bf16 compacted-solve matvecs (f32 FISTA state, bf16 X reads)
+    "opt_sgl":    {"sgl_cfg": {"solve_dtype": "bfloat16"}},
+}
+
+
+def probe_collectives(arch: str, cell_name: str, mesh, plan_overrides=None,
+                      unroll_probe=True, step_kwargs=None, cfg_overrides=None,
+                      needs_plan=False) -> dict:
+    """Per-device collective bytes via unrolled L=1 / L=2 compiles.
+
+    coll(L) = base + L*layer (collectives sit at layer boundaries, never
+    inside the sequence-chunk scans), so two probes pin both terms.
+    """
+    cfg_full = get_config(arch)
+    if cfg_overrides:
+        cfg_full = dataclasses.replace(cfg_full, **cfg_overrides)
+    coll = {}
+    for L in (1, 2):
+        cfg_l = dataclasses.replace(cfg_full, n_layers=L)
+        fn, args, shardings, donate, _, plan = _build_with_cfg(
+            arch, cfg_l, cell_name, mesh, plan_overrides, unroll=unroll_probe,
+            step_kwargs=step_kwargs, needs_plan=needs_plan)
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+        coll[L] = collective_bytes(compiled.as_text())["total"]
+    layer = max(coll[2] - coll[1], 0)
+    base = max(coll[1] - layer, 0)
+    total_dev = base + cfg_full.n_layers * layer
+    return {"base_dev": base, "per_layer_dev": layer,
+            "total_dev": total_dev, "probe": coll}
+
+
+def _build_with_cfg(arch, cfg, cell_name, mesh, plan_overrides, unroll=False,
+                    step_kwargs=None, needs_plan=False):
+    """build_cell but with an overridden ModelConfig (probe layers)."""
+    from repro.distributed.sharding import MeshPlan
+    from repro.models.steps import (build_prefill_step, build_serve_step,
+                                    build_train_step, input_specs)
+    from repro.models.model import init_cache
+    from repro.train.optim import (MasterOptState, init_master_opt_state,
+                                   init_opt_state)
+    import jax.numpy as jnp
+
+    cell = SHAPES[cell_name]
+    plan = MeshPlan.for_cell(mesh, cell)
+    if plan_overrides:
+        plan = dataclasses.replace(plan, **plan_overrides)
+    params = abstract_params(cfg)
+    pspecs = plan.param_specs(cfg, params)
+    batch = input_specs(cfg, cell)
+    bspecs = plan.batch_specs(batch)
+    kw = dict(step_kwargs or {})
+    if needs_plan or kw.get("moe_spmd"):
+        kw["plan"] = plan
+    if cell.kind == "train":
+        master = kw.get("master", False)
+        fn = build_train_step(cfg, shard=plan.shard, unroll=unroll, **kw)
+        if master:
+            opt = jax.eval_shape(init_master_opt_state, params)
+            ps = plan.param_specs(cfg, params)
+            ospecs = MasterOptState(ps, ps, ps, plan.ns())
+        else:
+            opt = jax.eval_shape(init_opt_state, params)
+            ospecs = plan.opt_specs(cfg, params)
+        return fn, (params, opt, batch), (pspecs, ospecs, bspecs), (0, 1), cfg, plan
+    if cell.kind == "prefill":
+        kw.pop("master", None)
+        fn = build_prefill_step(cfg, shard=plan.shard, unroll=unroll, **kw)
+        return fn, (params, batch), (pspecs, bspecs), (), cfg, plan
+    for drop in ("cast_early", "master", "window_static"):
+        kw.pop(drop, None)
+    fn = build_serve_step(cfg, shard=plan.shard, unroll=unroll, **kw)
+    cache = jax.eval_shape(lambda: init_cache(cfg, cell.global_batch, cell.seq_len))
+    cspecs = plan.cache_specs(cfg, cache)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params, cache, batch["tokens"], t), \
+        (pspecs, cspecs, bspecs["tokens"], plan.ns()), (1,), cfg, plan
+
+
+def sgl_roofline(out_path: str, mesh, force=False, variant="baseline",
+                 overrides=None):
+    """Roofline for the paper's genomics workload.
+
+    The FISTA loop is a scan over iterations, so the probe compiles
+    fista_iters=1/2 and extrapolates (same body-once correction as layers).
+    Analytic flops/bytes for screen/path_step are simple dense matvec math.
+    """
+    import dataclasses as _dc
+    from repro.analysis.roofline import roofline_terms, PEAK_FLOPS
+    from repro.configs.sgl_genomics import config as _sgl_config
+    from repro.launch.dryrun_lib import build_sgl_cell
+
+    cfg = _sgl_config()
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    results = load_results(out_path)
+    xb = 2 if cfg.x_dtype == "bfloat16" else 4
+    sb = 2 if cfg.solve_dtype == "bfloat16" else 4
+    for cell in ("sgl_screen", "sgl_path_step"):
+        key = f"sgl_genomics|{cell}" + ("" if variant == "baseline" else f"|{variant}")
+        if key in results and not force:
+            print(f"[roofline] cached {key}", flush=True)
+            continue
+        # collective probe over fista iterations
+        coll = {}
+        for it in (1, 2):
+            cfg_i = _dc.replace(cfg, fista_iters=it)
+
+            def _build(mesh, cfg_i=cfg_i):
+                import repro.configs.sgl_genomics as G
+                old = G.config
+                G.config = lambda: cfg_i
+                try:
+                    return build_sgl_cell(
+                        cell, mesh,
+                        gradreuse=variant in ("gradreuse", "opt_sgl"))
+                finally:
+                    G.config = old
+            fn, args, shardings, donate, _, _ = _build(mesh)
+            compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+            coll[it] = collective_bytes(compiled.as_text())["total"]
+        per_it = max(coll[2] - coll[1], 0)
+        base = max(coll[1] - per_it, 0)
+        total_dev = base + cfg.fista_iters * per_it if cell == "sgl_path_step" else coll[1]
+
+        n, p, w = cfg.n, cfg.p, cfg.solve_width
+        # full-X passes per path step: baseline 4 (screen resid+grad, KKT
+        # resid+grad); gradreuse 2 (the KKT grad IS the next screen grad)
+        passes = 2 if variant in ("gradreuse", "opt_sgl") else 4
+        if cell == "sgl_screen":
+            flops = 4.0 * n * p + 70 * p          # Xb + X^T r + eps-norm bisection
+            hbm = n * p * xb * 2 + p * 40
+        else:
+            flops = (2.0 * n * p * passes + 70 * p + 2.0 * n * w
+                     + cfg.fista_iters * 4.0 * n * w)
+            hbm = (n * p * xb * passes + n * w * sb
+                   + cfg.fista_iters * n * w * sb * 2 + p * 60)
+        # useful work: one screen/KKT gradient pass + the compacted solve
+        mf = flops if cell == "sgl_screen" else \
+            4.0 * n * p + cfg.fista_iters * 4.0 * n * w
+        terms = roofline_terms(flops, hbm, total_dev * CHIPS)
+        res = {"arch": "sgl_genomics", "cell": cell, "variant": variant,
+               "params": p, "active_params": p,
+               "flops_global": flops, "bytes_global": hbm,
+               "coll_bytes_global": total_dev * CHIPS,
+               "model_flops": mf, "useful_ratio": mf / flops,
+               "roofline_fraction": (mf / (CHIPS * PEAK_FLOPS)) /
+               max(terms["bottleneck_s"], 1e-30),
+               "coll_probe": {"base_dev": base, "per_iter_dev": per_it,
+                              "total_dev": total_dev, "probe": coll},
+               **terms}
+        save_result(out_path, key, res)
+        print(f"[roofline] sgl_genomics   {cell:12s} dom={res['dominant']:10s} "
+              f"frac={res['roofline_fraction']:.3f} "
+              f"c/m/x={res['compute_s']:.2e}/{res['memory_s']:.2e}/"
+              f"{res['collective_s']:.2e}s", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="roofline: analytic terms + "
+                                 "collective probes, single-pod mesh")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--sgl", action="store_true", help="only the genomics workload")
+    args = ap.parse_args(argv)
+    vspec = VARIANTS[args.variant]
+    step_kwargs = vspec.get("step", {})
+    cfg_overrides = vspec.get("cfg", {})
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    if args.sgl:
+        sgl_roofline(args.out, mesh, force=args.force, variant=args.variant,
+                     overrides=vspec.get("sgl_cfg"))
+        return 0
+    results = load_results(args.out)
+    failures = []
+    for arch in ARCHS:
+        if args.arch and arch != args.arch:
+            continue
+        cfg = get_config(arch)
+        if cfg_overrides:
+            cfg = dataclasses.replace(cfg, **cfg_overrides)
+        n_params = param_count(abstract_params(cfg))
+        n_active = cfg.active_param_count() if cfg.n_experts else n_params
+        for cell_name in applicable_cells(cfg):
+            if args.cell and cell_name != args.cell:
+                continue
+            key = f"{arch}|{cell_name}" + (
+                "" if args.variant == "baseline" else f"|{args.variant}")
+            if key in results and not args.force:
+                print(f"[roofline] cached {key}", flush=True)
+                continue
+            try:
+                probe = probe_collectives(arch, cell_name, mesh,
+                                          plan_overrides=vspec.get("plan"),
+                                          step_kwargs=step_kwargs,
+                                          cfg_overrides=cfg_overrides,
+                                          needs_plan=vspec.get("needs_plan", False))
+                res = analyze_cell(cfg, SHAPES[cell_name], n_params,
+                                   probe["total_dev"] * CHIPS,
+                                   n_active=n_active,
+                                   impl=vspec.get("impl", "masked_full"),
+                                   param_bytes=vspec.get("param_bytes", 4))
+                res.update({"arch": arch, "cell": cell_name,
+                            "variant": args.variant,
+                            "params": n_params, "active_params": n_active,
+                            "coll_probe": probe})
+                save_result(args.out, key, res)
+                print(f"[roofline] {arch:15s} {cell_name:12s} "
+                      f"dom={res['dominant']:10s} frac={res['roofline_fraction']:.3f} "
+                      f"c/m/x={res['compute_s']:.2e}/{res['memory_s']:.2e}/"
+                      f"{res['collective_s']:.2e}s", flush=True)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((key, repr(e)))
+    print(f"[roofline] done, {len(failures)} failures -> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

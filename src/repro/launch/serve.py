@@ -1,0 +1,66 @@
+"""Serving driver: batched autoregressive decode with the ring KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x22b --tokens 32
+
+Greedy-decodes a batch of requests with the same serve_step the dry-run
+lowers for the production mesh (reduced configs on this CPU container).
+``--kv-int8`` switches on the quantized-cache serving variant.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_reduced
+from ..models import build_serve_step, init_cache, init_params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral_8x22b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch)
+    if cfg.family == "encoder":
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+    if args.kv_int8:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = args.prompt_len + args.tokens
+    cache = init_cache(cfg, args.batch, max_seq)
+    step = jax.jit(build_serve_step(cfg))
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+                         jnp.int32)
+    # prefill via the decode path (teacher-forcing the prompt)
+    tok = prompt[:, :1]
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, t:t + 1], jnp.asarray(t))
+    out = []
+    tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len, max_seq):
+        out.append(np.asarray(tok[:, 0]))
+        logits, cache = step(params, cache, tok, jnp.asarray(t))
+        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    gen = np.stack(out, axis=1)
+    print(f"[serve] {cfg.name} reduced: {args.batch} seqs x {args.tokens} tokens "
+          f"in {dt:.2f}s ({args.batch*args.tokens/dt:.1f} tok/s on 1 CPU core)")
+    print(f"[serve] sample continuation: {gen[0][:16].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Assigned architecture zoo: configs, scanned-block model, step builders."""
+from .config import ModelConfig, ShapeCell, SHAPES, applicable_cells
+from .model import init_params, abstract_params, forward, decode_step, init_cache, param_count
+from .steps import (build_train_step, build_prefill_step, build_serve_step,
+                    input_specs, concrete_inputs, cross_entropy, loss_fn)

@@ -1,0 +1,158 @@
+"""Model configuration for the assigned architecture zoo.
+
+One ``ModelConfig`` drives every family (dense / MoE / RWKV / hybrid /
+encoder).  Layer heterogeneity (local vs global attention) is expressed as a
+*per-layer window array* consumed as a scan input, so a single scanned block
+serves patterned architectures (gemma2/3, hymba) without unrolling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | rwkv | hybrid | encoder
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    # attention pattern: window per layer; 0 = global. built by `windows()`
+    attn_pattern: str = "global"          # global | local:<W> | alt_lg:<W> | gemma3:<W>
+    attn_softcap: float = 0.0             # gemma2: 50.0
+    final_softcap: float = 0.0            # gemma2: 30.0
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (hybrid / rwkv)
+    ssm_state: int = 0
+
+    # modality frontend: tokens | frames (audio stub) | patches (vlm stub)
+    frontend: str = "tokens"
+    n_patches: int = 256                  # vlm stub prefix length
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    kv_quant: bool = False          # int8 KV cache (serving perf variant)
+
+    # ------------------------------------------------------------------
+    @property
+    def causal(self) -> bool:
+        return self.family != "encoder"
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "rwkv"
+
+    def windows(self, seq_len: int) -> np.ndarray:
+        """Per-layer attention window (== seq_len for global layers)."""
+        L = self.n_layers
+        if self.attn_pattern == "global":
+            w = np.full(L, seq_len)
+        elif self.attn_pattern.startswith("local:"):
+            w = np.full(L, int(self.attn_pattern.split(":")[1]))
+        elif self.attn_pattern.startswith("alt_lg:"):
+            # gemma2: alternating local / global, local first
+            wl = int(self.attn_pattern.split(":")[1])
+            w = np.asarray([wl if i % 2 == 0 else seq_len for i in range(L)])
+        elif self.attn_pattern.startswith("gemma3:"):
+            # gemma3: 5 local : 1 global
+            wl = int(self.attn_pattern.split(":")[1])
+            w = np.asarray([seq_len if (i + 1) % 6 == 0 else wl for i in range(L)])
+        else:
+            raise ValueError(self.attn_pattern)
+        return np.minimum(w, seq_len).astype(np.int32)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Serving cost per token bounded as context grows (long_500k gate)."""
+        if self.family == "rwkv":
+            return True
+        if self.attn_pattern == "global" or self.attn_pattern.startswith("alt_lg") \
+                or self.attn_pattern.startswith("gemma3"):
+            return False
+        return True   # pure sliding-window (mixtral, hymba)
+
+    def cache_len(self, seq_len: int) -> int:
+        """KV slots a decode cache needs (ring buffer for pure-SWA archs)."""
+        if self.attention_free:
+            return 0
+        return int(self.windows(seq_len).max())
+
+    def param_count(self) -> int:
+        """Exact parameter count of this implementation."""
+        d, f, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        Hd = self.n_heads * self.head_dim
+        Kd = self.n_kv * self.head_dim
+        n = V * d                      # embed
+        n += V * d                     # lm_head (untied)
+        n += d                         # final norm
+        per = 2 * d                    # 2 rms norms
+        if self.family == "rwkv":
+            H = d // self.head_dim
+            # wkv6: r/k/v/g/o projections + decay lora + time-mix params
+            per += 5 * d * d + d * 64 * 2 + 6 * d + H * self.head_dim
+            per += 2 * d * 3.5 * d     # channel-mix (k 3.5x + r + v)
+            per = int(per)
+        else:
+            per += d * Hd + 2 * d * Kd + Hd * d        # attention
+            if self.family == "hybrid":
+                di = Hd                                 # ssm branch width
+                N = self.ssm_state
+                per += d * di * 2 + di * d + di * N * 2 + di + di * N  # in/out/B/C/dt/A
+            if self.n_experts:
+                per += d * self.n_experts + self.n_experts * 3 * d * f
+            else:
+                per += 3 * d * f
+        return int(n + L * per)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        unused = (self.n_experts - self.top_k) * 3 * d * f
+        return int(self.param_count() - L * unused)
+
+
+# ---------------------------------------------------------------------------
+# shape cells (assignment block)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_cells(cfg: ModelConfig):
+    """The assignment's skip rules, encoded."""
+    cells = ["train_4k", "prefill_32k"]
+    if cfg.family != "encoder":
+        cells.append("decode_32k")
+        if cfg.sub_quadratic:
+            cells.append("long_500k")
+    return cells

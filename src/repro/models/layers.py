@@ -1,0 +1,416 @@
+"""Building blocks for the architecture zoo (pure functions, pytree params).
+
+Everything is written once and reused across families:
+
+* GQA attention with per-layer windows (traced scan input), RoPE, logit
+  softcaps, and a chunked (flash-style) streaming softmax so 32k/500k
+  sequences never materialize an [S, S] score matrix.
+* Ring-buffer KV cache decode: slots are addressed ``pos % cache_len`` and
+  carry absolute positions, so pure-SWA architectures (mixtral, hymba) decode
+  a 500k stream with a window-sized cache.
+* Token-choice top-k MoE with capacity, dispatched with a per-data-shard
+  scatter (wrapped in shard_map by steps.py so the buffers stay local).
+* RWKV6 chunked WKV recurrence and a Mamba-style selective SSM, both as
+  chunk-scans whose intra-chunk work is parallel einsum math.
+
+Compute dtype bf16, reductions f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return ((1.0 + scale.astype(jnp.float32)) * out).astype(x.dtype)
+
+
+def rope(x, positions, theta=10_000.0):
+    """x [..., S, H, D]; positions [..., S] (absolute)."""
+    d_half = x.shape[-1] // 2
+    freqs = (theta ** (-jnp.arange(0, d_half, dtype=jnp.float32) / d_half))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # [..., S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    if cap and cap > 0:
+        return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# attention (training / prefill): chunked streaming softmax
+# ---------------------------------------------------------------------------
+
+def attention_full(q, k, v, *, causal=True, window=None, cap=0.0,
+                   q_chunk=1024, kv_chunk=1024):
+    """q [B,S,H,D], k/v [B,S,K,D] -> [B,S,H,D].
+
+    GQA by head grouping; per-layer ``window`` may be a traced scalar (global
+    layers pass window >= S).  Streaming (flash-style) softmax over KV chunks
+    inside a scan over Q chunks: peak score memory is q_chunk x kv_chunk.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, D)
+    scale = 1.0 / np.sqrt(D)
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    nq, nk = S // qc, S // kc
+    assert S % qc == 0 and S % kc == 0, (S, qc, kc)
+    w = jnp.asarray(S if window is None else window, jnp.int32)
+
+    q_blocks = q.reshape(B, nq, qc, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+    k_blocks = k.reshape(B, nk, kc, K, D).transpose(1, 0, 2, 3, 4)
+    v_blocks = v.reshape(B, nk, kc, K, D).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_qb):
+        qi, qb = qi_qb                                      # qb [B,qc,K,G,D]
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki_kb):
+            m, l, acc = carry
+            ki, kb, vb = ki_kb
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgd,bckd->bqgkc", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale   # [B,qc,G,K,kc]
+            s = softcap(s, cap)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            mask &= (q_pos[:, None] - k_pos[None, :]) < w
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqgkc,bckd->bqgkd", p, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qc, G, K), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, qc, G, K), jnp.float32)
+        a0 = jnp.zeros((B, qc, G, K, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), k_blocks, v_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]         # [B,qc,G,K,D]
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), q_blocks))
+    out = blocks.transpose(1, 0, 2, 4, 3, 5)                # [B,nq,qc,K,G,D]
+    return out.reshape(B, S, K * G, D)
+
+
+# ---------------------------------------------------------------------------
+# attention (decode): ring-buffer cache, GSPMD-partitionable softmax
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer-stacked ring cache.  k/v: [L,B,C,K,D]; pos: [L,B,C] abs
+    positions (-1 = empty)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+    @staticmethod
+    def init(L, B, C, K, D, dtype=jnp.bfloat16):
+        return KVCache(jnp.zeros((L, B, C, K, D), dtype),
+                       jnp.zeros((L, B, C, K, D), dtype),
+                       jnp.full((L, B, C), -1, jnp.int32))
+
+
+jax.tree_util.register_pytree_node(
+    KVCache, lambda c: ((c.k, c.v, c.pos), None),
+    lambda _, l: KVCache(*l))
+
+
+def decode_attention(q, k_new, v_new, layer_cache, t, *, window, cap=0.0,
+                     scales=None):
+    """One-token attention against a ring cache.
+
+    q [B,1,H,D]; k_new/v_new [B,1,K,D]; layer_cache (k,v,pos) with k [B,C,K,D];
+    t: scalar int32 absolute position of the new token.  With ``scales``
+    ([B,C,K,2] f32) the cache is int8 and dequantized on read (serving perf
+    variant: halves the KV read bytes).  Returns (out, cache, scales).
+    """
+    ck, cv, cpos = layer_cache
+    B, C, K, D = ck.shape
+    H = q.shape[2]
+    G = H // K
+    slot = jnp.mod(t, C)
+    if scales is not None:
+        k32, v32 = k_new.astype(jnp.float32), v_new.astype(jnp.float32)
+        ks = jnp.max(jnp.abs(k32), axis=-1)[:, 0] / 127.0        # [B,K]
+        vs = jnp.max(jnp.abs(v32), axis=-1)[:, 0] / 127.0
+        k_new = jnp.round(k32 / jnp.maximum(ks, 1e-9)[:, None, :, None]).astype(jnp.int8)
+        v_new = jnp.round(v32 / jnp.maximum(vs, 1e-9)[:, None, :, None]).astype(jnp.int8)
+        new_sc = jnp.stack([ks, vs], axis=-1)[:, None]           # [B,1,K,2]
+        scales = jax.lax.dynamic_update_slice(scales, new_sc, (0, slot, 0, 0))
+    ck = jax.lax.dynamic_update_slice(ck, k_new, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v_new, (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        cpos, jnp.full((B, 1), t, jnp.int32), (0, slot))
+
+    qf = q.reshape(B, K, G, D).astype(jnp.float32)
+    ckf = ck.astype(jnp.float32)
+    cvf = cv.astype(jnp.float32)
+    if scales is not None:
+        ckf = ckf * scales[..., 0][..., None]
+        cvf = cvf * scales[..., 1][..., None]
+    s = jnp.einsum("bkgd,bckd->bgkc", qf, ckf) / np.sqrt(D)
+    s = softcap(s, cap)
+    valid = (cpos >= 0) & (cpos <= t) & ((t - cpos) < window)   # [B,C]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bgkc,bckd->bgkd", p, cvf)
+    out = out / jnp.maximum(jnp.sum(p, axis=-1), 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, H, D)        # [B,1,H,D]
+    return out.astype(q.dtype), (ck, cv, cpos), scales
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def moe_local(x, wr, wg, wu, wd, *, top_k: int, capacity_factor: float):
+    """Token-choice top-k MoE with capacity, *local to a data shard*.
+
+    x [T, d]; wr [d, E]; wg/wu [E, d, f]; wd [E, f, d].
+    """
+    T, d = x.shape
+    E = wr.shape[1]
+    C = max(1, int(capacity_factor * T * top_k / E))
+    logits = (x.astype(jnp.float32) @ wr.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, top_k)                    # [T,K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eid.reshape(-1)                                   # [T*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # [T*K,E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C
+    xrep = jnp.repeat(x, top_k, axis=0)                        # [T*K,d]
+    xrep = jnp.where(keep[:, None], xrep, 0.0)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[flat_e, jnp.minimum(pos_in_e, C - 1)].add(xrep)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum("ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd)                      # [E,C,d]
+
+    ytok = y[flat_e, jnp.minimum(pos_in_e, C - 1)]             # [T*K,d]
+    ytok = jnp.where(keep[:, None], ytok, 0.0)
+    out = (ytok.reshape(T, top_k, d)
+           * gate.astype(x.dtype)[..., None]).sum(axis=1)
+    aux = {"load": jnp.mean(probs, axis=0)}                    # router load (aux loss)
+    return out, aux
+
+
+def attention_local_static(q, k, v, *, window: int, cap=0.0, q_chunk=512):
+    """Sliding-window attention with a *static* window: each Q chunk slices
+    only the KV range it can see (window + chunk), skipping out-of-window
+    compute entirely (vs the baseline's masked-full scores).
+
+    Perf variant for pure/mostly-local architectures (gemma3, mixtral,
+    hymba); FLOPs per layer drop from O(S^2) to O(S*(window+chunk)).
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qc = min(q_chunk, S)
+    nq = S // qc
+    assert S % qc == 0
+    ws = min(S, window + qc)
+    scale = 1.0 / np.sqrt(D)
+    q_blocks = q.reshape(B, nq, qc, K, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    def q_step(_, qi_qb):
+        qi, qb = qi_qb                                     # [B,qc,K,G,D]
+        q_lo = qi * qc
+        start = jnp.clip(q_lo + qc - ws, 0, S - ws)
+        ks = jax.lax.dynamic_slice(k, (0, start, 0, 0), (B, ws, K, D))
+        vs = jax.lax.dynamic_slice(v, (0, start, 0, 0), (B, ws, K, D))
+        q_pos = q_lo + jnp.arange(qc)
+        k_pos = start + jnp.arange(ws)
+        s = jnp.einsum("bqkgd,bckd->bqgkc", qb.astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        s = softcap(s, cap)
+        mask = (q_pos[:, None] >= k_pos[None, :]) & \
+               ((q_pos[:, None] - k_pos[None, :]) < window)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m)
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        o = jnp.einsum("bqgkc,bckd->bqgkd", p, vs.astype(jnp.float32))
+        o = o / jnp.maximum(jnp.sum(p, axis=-1), 1e-30)[..., None]
+        return None, o.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), q_blocks))
+    out = blocks.transpose(1, 0, 2, 4, 3, 5)
+    return out.reshape(B, S, K * G, D)
+
+
+def moe_manual(x, wr, wg, wu, wd, *, top_k: int, capacity_factor: float,
+               model_axis: str):
+    """Token-choice MoE for fully-manual shard_map: weights arrive with the
+    FFN dim f LOCALLY SHARDED over ``model_axis``; the down-projection
+    produces model-partial token outputs which are combined FIRST and
+    all-reduced LAST — the reduce moves [T, d] instead of the 5x larger
+    [E, C, d] capacity buffer."""
+    T, d = x.shape
+    E = wr.shape[1]
+    C = max(1, int(capacity_factor * T * top_k / E))
+    logits = x.astype(jnp.float32) @ wr.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eid.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C
+    xrep = jnp.where(keep[:, None], jnp.repeat(x, top_k, axis=0), 0.0)
+    buf = jnp.zeros((E, C, d), x.dtype).at[flat_e, jnp.minimum(pos_in_e, C - 1)].add(xrep)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu)          # [E,C,f_local]
+    y = jnp.einsum("ecf,efd->ecd", h, wd)              # model-PARTIAL [E,C,d]
+
+    ytok = y[flat_e, jnp.minimum(pos_in_e, C - 1)]
+    ytok = jnp.where(keep[:, None], ytok, 0.0)
+    out = (ytok.reshape(T, top_k, d) * gate.astype(x.dtype)[..., None]).sum(axis=1)
+    return jax.lax.psum(out.astype(jnp.float32), model_axis).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6: data-dependent decay WKV, chunked
+# ---------------------------------------------------------------------------
+
+def rwkv_wkv_chunked(r, k, v, w_log, u, state, chunk=16):
+    """WKV6 recurrence over a sequence, chunk-parallel.
+
+    r/k/v [B,S,H,N]; w_log [B,S,H,N] (log decay, <= 0); u [H,N] bonus;
+    state [B,H,N,N] ("N_key x N_value").  Returns (out [B,S,H,N], state').
+
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T;   o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    """
+    B, S, H, N = r.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nchunks = S // c
+
+    def chunk_step(S0, inputs):
+        rc, kc, vc, wc = inputs                    # [B,c,H,N]
+        Kinc = jnp.cumsum(wc, axis=1)              # [B,c,H,N] inclusive logsum
+        Kexc = Kinc - wc                           # exclusive
+        # cross-chunk: o_cross[t] = (r_t * exp(Kexc_t))^T S0
+        r_dec = rc * jnp.exp(Kexc)
+        o_cross = jnp.einsum("bthn,bhnm->bthm", r_dec, S0)
+        # intra-chunk scores with decay exp(Kexc[t] - Kinc[s]) for s<t (<=0: stable)
+        decay = jnp.exp(jnp.minimum(
+            Kexc[:, :, None, :, :] - Kinc[:, None, :, :, :], 0.0))  # [B,t,s,H,N]
+        tri = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])     # s < t
+        A = jnp.einsum("bthn,btshn,bshn->btsh", rc, decay, kc)
+        A = A * tri[None, :, :, None]
+        A = A + jnp.einsum("bthn,hn,bthn->bth", rc, u, kc)[:, :, None, :] \
+            * jnp.eye(c)[None, :, :, None]                          # diag bonus
+        o_intra = jnp.einsum("btsh,bshm->bthm", A, vc)
+        out = o_cross + o_intra
+        # state to end of chunk
+        dec_end = jnp.exp(Kinc[:, -1, :, :][:, None] - Kinc)        # [B,c,H,N] <=1
+        S_new = S0 * jnp.exp(Kinc[:, -1])[..., None] \
+            + jnp.einsum("bshn,bshm->bhnm", kc * dec_end, vc)
+        return S_new, out
+
+    reshape = lambda x: x.reshape(B, nchunks, c, H, N).transpose(1, 0, 2, 3, 4)
+    state, outs = jax.lax.scan(
+        chunk_step, state.astype(jnp.float32),
+        (reshape(r).astype(jnp.float32), reshape(k).astype(jnp.float32),
+         reshape(v).astype(jnp.float32), reshape(w_log).astype(jnp.float32)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    return out.astype(r.dtype), state
+
+
+def rwkv_wkv_step(r, k, v, w_log, u, state):
+    """Single-token WKV update: r/k/v/w [B,H,N]; state [B,H,N,N]."""
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+    out = jnp.einsum("bhn,bhnm->bhm", r, state + u[None, :, :, None] * kv)
+    state = state * jnp.exp(w_log)[..., None] + kv
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba branch)
+# ---------------------------------------------------------------------------
+
+def ssm_scan(u, dt, Bc, Cc, A_log, state, chunk=16):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t u_t B_t;  y_t = <h_t, C_t>.
+
+    u/dt [B,S,di]; Bc/Cc [B,S,N]; A_log [di,N]; state [B,di,N].
+    """
+    B, S, di = u.shape
+    N = Bc.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    A = -jnp.exp(A_log.astype(jnp.float32))                     # [di,N] < 0
+
+    def chunk_step(h0, inp):
+        uc, dtc, bc, cc = inp                                   # [B,c,...]
+        a = jnp.exp(dtc[..., None] * A[None, None])             # [B,c,di,N]
+        x = (dtc * uc)[..., None] * bc[:, :, None, :]           # [B,c,di,N]
+
+        def combine(e1, e2):
+            a1, x1 = e1
+            a2, x2 = e2
+            return a1 * a2, x2 + a2 * x1
+
+        aa, xx = jax.lax.associative_scan(combine, (a, x), axis=1)
+        h = aa * h0[:, None] + xx                               # [B,c,di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h, cc)
+        return h[:, -1], y
+
+    rs3 = lambda x: x.reshape(B, S // c, c, -1).transpose(1, 0, 2, 3)
+    h, ys = jax.lax.scan(
+        chunk_step, state.astype(jnp.float32),
+        (rs3(u).astype(jnp.float32), rs3(dt).astype(jnp.float32),
+         rs3(Bc).astype(jnp.float32), rs3(Cc).astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y.astype(u.dtype), h
+
+
+def ssm_step(u, dt, Bc, Cc, A_log, state):
+    """Single-token update: u/dt [B,di]; Bc/Cc [B,N]; state [B,di,N]."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A[None])
+    state = a * state + (dt * u)[..., None] * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", state, Cc)
+    return y.astype(u.dtype), state

@@ -1,0 +1,487 @@
+"""The architecture zoo: one scanned-block model covering all five families.
+
+Parameters are a dict pytree with per-layer arrays stacked on a leading [L]
+axis (single-compile scanned blocks); layer heterogeneity (local/global
+windows) rides along as a scan input.  Forward returns logits; decode_step
+advances one token against family-specific caches:
+
+  dense/moe : ring-buffer KVCache
+  rwkv      : (wkv state [L,B,H,N,N], token-shift states [L,B,d] x2)
+  hybrid    : (KVCache, ssm state [L,B,di,N])
+  encoder   : no decode (assignment skip rule)
+
+All matmul weights live in ``param_dtype`` and are cast to ``compute_dtype``
+on use; attention/softmax/scan reductions accumulate in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (KVCache, attention_full, attention_local_static,
+                     decode_attention, moe_local, moe_manual,
+                     rms_norm, rope, rwkv_wkv_chunked, rwkv_wkv_step, softcap,
+                     ssm_scan, ssm_step, swiglu)
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def block_param_shapes(cfg: ModelConfig) -> dict:
+    """name -> (shape-without-L, kind) ; kind in {norm, dense, special}."""
+    d, f = cfg.d_model, cfg.d_ff
+    Hd = cfg.n_heads * cfg.head_dim
+    Kd = cfg.n_kv * cfg.head_dim
+    shapes = {"ln1": ((d,), "norm"), "ln2": ((d,), "norm")}
+    if cfg.family == "rwkv":
+        H, N = d // cfg.head_dim, cfg.head_dim
+        shapes.update({
+            "mu": ((5, d), "norm"),
+            "wr": ((d, d), "dense"), "wk": ((d, d), "dense"),
+            "wv": ((d, d), "dense"), "wg": ((d, d), "dense"),
+            "wo": ((d, d), "dense"),
+            "w0": ((d,), "norm"),
+            "w_lora_a": ((d, 64), "dense"), "w_lora_b": ((64, d), "dense"),
+            "u": ((H, N), "norm"),
+            "ln_x": ((d,), "norm"),
+            "mu_c": ((2, d), "norm"),
+            "ck": ((d, f), "dense"), "cv": ((f, d), "dense"),
+            "cr": ((d, d), "dense"),
+        })
+        return shapes
+    shapes.update({
+        "wq": ((d, Hd), "dense"), "wk": ((d, Kd), "dense"),
+        "wv": ((d, Kd), "dense"), "wo": ((Hd, d), "dense"),
+    })
+    if cfg.n_experts:
+        E = cfg.n_experts
+        shapes.update({
+            "router": ((d, E), "dense"),
+            "eg": ((E, d, f), "dense"), "eu": ((E, d, f), "dense"),
+            "ed": ((E, f, d), "dense"),
+        })
+    else:
+        shapes.update({"mg": ((d, f), "dense"), "mu_up": ((d, f), "dense"),
+                       "md": ((f, d), "dense")})
+    if cfg.family == "hybrid":
+        di, N = Hd, cfg.ssm_state
+        shapes.update({
+            "s_in": ((d, 2 * di), "dense"),
+            "s_bc": ((di, 2 * N), "dense"),
+            "s_dt1": ((di, 64), "dense"), "s_dt2": ((64, di), "dense"),
+            "s_dtb": ((di,), "norm"),
+            "s_alog": ((di, N), "alog"),
+            "s_skip": ((di,), "norm"),
+            "s_out": ((di, d), "dense"),
+        })
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    d, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    params = {
+        "embed": _dense_init(keys[0], (V, d), pd, scale=1.0),
+        "final_norm": jnp.zeros((d,), pd),
+        "lm_head": _dense_init(keys[1], (d, V), pd),
+    }
+    blocks = {}
+    bkey = keys[2]
+    for name, (shape, kind) in block_param_shapes(cfg).items():
+        bkey, sub = jax.random.split(bkey)
+        full = (L,) + shape
+        if kind == "norm":
+            blocks[name] = jnp.zeros(full, pd)
+        elif kind == "alog":
+            # A_log init: log of [1..N] broadcast over channels (mamba default)
+            a = jnp.log(jnp.arange(1, shape[-1] + 1, dtype=jnp.float32))
+            blocks[name] = jnp.broadcast_to(a, full).astype(pd)
+        else:
+            blocks[name] = _dense_init(sub, full, pd)
+    params["blocks"] = blocks
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, p, x, window, positions, static_window=None):
+    B, S, d = x.shape
+    cd = _dt(cfg)
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    q = (h @ p["wq"].astype(cd)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (h @ p["wk"].astype(cd)).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = (h @ p["wv"].astype(cd)).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    qc = 512 if S >= 2048 else S
+    if static_window is not None and static_window < S:
+        o = attention_local_static(q, k, v, window=static_window,
+                                   cap=cfg.attn_softcap, q_chunk=qc)
+    else:
+        o = attention_full(q, k, v, causal=cfg.causal, window=window,
+                           cap=cfg.attn_softcap, q_chunk=qc, kv_chunk=qc)
+    return (o.reshape(B, S, -1) @ p["wo"].astype(cd))
+
+
+def _moe_spmd(cfg: ModelConfig, plan, h, p):
+    """Perf variant: MoE dispatch under shard_map, manual over the data
+    axes, auto over the TP axis.
+
+    The pjit baseline lets GSPMD realize the capacity buffer as a
+    *data-replicated* [E, C_global, d] array built by scatter + all-reduce —
+    the single largest collective in the MoE train step (measured 130 GiB
+    per device per layer-pass on dbrx).  Under shard_map each data shard
+    dispatches its own tokens into a local [E, C_local, d] buffer; the only
+    data-axis collective left is the FSDP weight all-gather, done here
+    explicitly (so its wire dtype is exactly the param dtype)."""
+    from jax.sharding import PartitionSpec as P
+    cd = _dt(cfg)
+    dax = plan.batch_axes
+    fs, tp = plan.fsdp_axis, plan.tp_axis
+    B, S, d = h.shape
+
+    # router's expert dim is TP-sharded only when divisible (dbrx E=16 yes,
+    # mixtral E=8 no — then it is replicated over the model axis)
+    E = p["router"].shape[1]
+    e_tp = E % plan.mesh.shape[tp] == 0
+
+    def local(h_loc, wr, wg, wu, wd):
+        # explicit FSDP gathers (wire dtype = exactly the param dtype);
+        # the FFN dim f stays model-sharded through the expert matmuls
+        ga = lambda w, ax: jax.lax.all_gather(w.astype(cd), fs, axis=ax, tiled=True)
+        wr_f = ga(wr, 0)                                              # [d,E?]
+        if e_tp:
+            wr_f = jax.lax.all_gather(wr_f, tp, axis=1, tiled=True)   # [d,E]
+        Bl, Sl, _ = h_loc.shape
+        out = moe_manual(h_loc.reshape(Bl * Sl, d), wr_f, ga(wg, 1), ga(wu, 1),
+                         ga(wd, 2), top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor, model_axis=tp)
+        return out.reshape(Bl, Sl, d)
+
+    bspec = P(dax, None, None)
+    return jax.shard_map(
+        local, mesh=plan.mesh,
+        in_specs=(bspec, P(fs, tp if e_tp else None), P(None, fs, tp),
+                  P(None, fs, tp), P(None, tp, fs)),
+        out_specs=bspec, axis_names=set(dax) | {fs, tp}, check_vma=False,
+    )(h, p["router"], p["eg"], p["eu"], p["ed"])
+
+
+def _mlp_block(cfg: ModelConfig, p, x, plan=None, moe_spmd=False):
+    cd = _dt(cfg)
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    if cfg.n_experts:
+        B, S, d = h.shape
+        if moe_spmd and plan is not None and B % plan.data_size == 0:
+            return _moe_spmd(cfg, plan, h, p)
+        out, _ = moe_local(h.reshape(B * S, d), p["router"].astype(cd),
+                           p["eg"].astype(cd), p["eu"].astype(cd),
+                           p["ed"].astype(cd), top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor)
+        return out.reshape(B, S, d)
+    return swiglu(h, p["mg"].astype(cd), p["mu_up"].astype(cd), p["md"].astype(cd))
+
+
+def _ssm_branch(cfg: ModelConfig, p, h, state=None):
+    """h [B,S,d] normed input -> (y [B,S,d], new_state).  state [B,di,N]."""
+    cd = _dt(cfg)
+    B, S, d = h.shape
+    di = cfg.n_heads * cfg.head_dim
+    xz = h @ p["s_in"].astype(cd)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(u)
+    dt = jax.nn.softplus((u @ p["s_dt1"].astype(cd)) @ p["s_dt2"].astype(cd)
+                         + p["s_dtb"].astype(cd))
+    bc = u @ p["s_bc"].astype(cd)
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    if state is None:
+        state = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+    if S == 1:
+        y, state = ssm_step(u[:, 0], dt[:, 0], Bc[:, 0], Cc[:, 0],
+                            p["s_alog"], state)
+        y = y[:, None]
+    else:
+        y, state = ssm_scan(u, dt, Bc, Cc, p["s_alog"], state)
+    y = y + p["s_skip"].astype(cd) * u
+    y = y * jax.nn.silu(z)
+    return y @ p["s_out"].astype(cd), state
+
+
+def _rwkv_time_mix(cfg, p, x, x_prev, wkv_fn):
+    """x [B,S,d]; x_prev [B,d] last token of previous segment."""
+    cd = _dt(cfg)
+    B, S, d = x.shape
+    H, N = d // cfg.head_dim, cfg.head_dim
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)   # shifted
+    mu = p["mu"].astype(cd)                                      # [5,d]
+    mix = lambda i: x + (xs - x) * mu[i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ p["wr"].astype(cd)).reshape(B, S, H, N)
+    k = (xk @ p["wk"].astype(cd)).reshape(B, S, H, N)
+    v = (xv @ p["wv"].astype(cd)).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ p["wg"].astype(cd))
+    # data-dependent decay (lora): w in (0,1), log w <= 0
+    wl = p["w0"].astype(cd) + jnp.tanh(xw @ p["w_lora_a"].astype(cd)) @ p["w_lora_b"].astype(cd)
+    w_log = -jnp.exp(wl.astype(jnp.float32)).reshape(B, S, H, N)
+    o, state = wkv_fn(r, k, v, w_log, p["u"].astype(jnp.float32))
+    o = o.reshape(B, S, d)
+    # per-head group norm
+    o32 = o.astype(jnp.float32).reshape(B, S, H, N)
+    o32 = (o32 - o32.mean(-1, keepdims=True)) * jax.lax.rsqrt(o32.var(-1, keepdims=True) + 1e-5)
+    o = (o32.reshape(B, S, d) * (1.0 + p["ln_x"].astype(jnp.float32))).astype(cd)
+    return (o * g) @ p["wo"].astype(cd), state, x[:, -1]
+
+
+def _rwkv_channel_mix(cfg, p, x, x_prev):
+    cd = _dt(cfg)
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mu = p["mu_c"].astype(cd)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"].astype(cd)))
+    return jax.nn.sigmoid(xr @ p["cr"].astype(cd)) * (k @ p["cv"].astype(cd)), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    cd = _dt(cfg)
+    emb = params["embed"].astype(cd)
+    if cfg.frontend == "frames":
+        return batch["frames"].astype(cd)
+    x = jnp.take(emb, batch["tokens"], axis=0) * float(np.sqrt(cfg.d_model))
+    if cfg.frontend == "patches":
+        x = jnp.concatenate([batch["patch_embeds"].astype(cd), x], axis=1)
+    return x
+
+
+def cast_dense_early(cfg: ModelConfig, blocks: dict) -> dict:
+    """Perf variant: cast matmul weights to compute dtype BEFORE the layer
+    scan, so FSDP all-gathers move bf16 instead of f32 (2x collective bytes).
+    Numerically identical to the baseline: these weights are cast at use
+    anyway; norm/decay/f32-sensitive params are left untouched."""
+    cd = _dt(cfg)
+    dense = {k for k, (_, kind) in block_param_shapes(cfg).items()
+             if kind == "dense"}
+    return {k: (v.astype(cd) if k in dense else v) for k, v in blocks.items()}
+
+
+def forward(cfg: ModelConfig, params, batch, *, shard=None, remat=True,
+            unroll=False, cast_early=False, plan=None, moe_spmd=False,
+            window_static=False):
+    """Logits for a full sequence (training / prefill).  ``unroll`` unrolls
+    the layer scan (roofline probes: XLA cost analysis counts a scan body
+    once, so probes compile unrolled L=1/L=2 variants)."""
+    shard = shard or (lambda x, kind: x)
+    x = embed_inputs(cfg, params, batch)
+    x = shard(x, "act")
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    windows = jnp.asarray(cfg.windows(S)) if not cfg.attention_free else jnp.zeros(cfg.n_layers, jnp.int32)
+
+    if cfg.family == "rwkv":
+        def block(x, inp):
+            p, _ = inp
+            zeros = jnp.zeros((B, d), x.dtype)
+            state0 = jnp.zeros((B, d // cfg.head_dim, cfg.head_dim, cfg.head_dim), jnp.float32)
+            wkv = lambda r, k, v, w, u: rwkv_wkv_chunked(r, k, v, w, u, state0)
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            o, _, _ = _rwkv_time_mix(cfg, p, h, zeros, wkv)
+            x = shard(x + o, "act")
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            o2, _ = _rwkv_channel_mix(cfg, p, h2, zeros)
+            return shard(x + o2, "act"), None
+    elif cfg.family == "hybrid":
+        def block(x, inp, static_window=None):
+            p, w = inp
+            # parallel attn + SSM heads on the same normed input (hymba)
+            a = _attn_block(cfg, p, x, w, positions, static_window)
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            s, _ = _ssm_branch(cfg, p, h)
+            x = shard(x + 0.5 * (a + s), "act")
+            x = shard(x + _mlp_block(cfg, p, x, plan, moe_spmd), "act")
+            return x, None
+    else:
+        def block(x, inp, static_window=None):
+            p, w = inp
+            x = shard(x + _attn_block(cfg, p, x, w, positions, static_window), "act")
+            x = shard(x + _mlp_block(cfg, p, x, plan, moe_spmd), "act")
+            return x, None
+
+    blocks = cast_dense_early(cfg, params["blocks"]) if cast_early else params["blocks"]
+    if window_static and not cfg.attention_free:
+        # perf variant: partition the layer stack into segments of equal
+        # (static) window so local layers slice instead of mask — the scan
+        # compiles one body per distinct window value
+        wins = cfg.windows(S)
+        segments = []
+        l0 = 0
+        for l in range(1, cfg.n_layers + 1):
+            if l == cfg.n_layers or wins[l] != wins[l0]:
+                segments.append((l0, l, int(wins[l0])))
+                l0 = l
+        for (a, b, w) in segments:
+            seg_blocks = jax.tree_util.tree_map(lambda t: t[a:b], blocks)
+            import functools as _ft
+            blk = _ft.partial(block, static_window=w)
+            blk = jax.checkpoint(blk) if remat else blk
+            x, _ = jax.lax.scan(blk, x, (seg_blocks, windows[a:b]),
+                                unroll=(b - a) if unroll else 1)
+    else:
+        blk = jax.checkpoint(block) if remat else block
+        x, _ = jax.lax.scan(blk, x, (blocks, windows),
+                            unroll=cfg.n_layers if unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["lm_head"].astype(_dt(cfg))
+    logits = softcap(logits, cfg.final_softcap)
+    return shard(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int):
+    L, B = cfg.n_layers, batch_size
+    cd = _dt(cfg)
+    if cfg.family == "rwkv":
+        H, N, d = cfg.d_model // cfg.head_dim, cfg.head_dim, cfg.d_model
+        return {"wkv": jnp.zeros((L, B, H, N, N), jnp.float32),
+                "shift_t": jnp.zeros((L, B, d), cd),
+                "shift_c": jnp.zeros((L, B, d), cd)}
+    C = cfg.cache_len(max_seq)
+    kv = KVCache.init(L, B, C, cfg.n_kv, cfg.head_dim,
+                      jnp.int8 if cfg.kv_quant else cd)
+    out = {"kv": kv}
+    if cfg.kv_quant:
+        # per (slot, head) dequant scales — int8 cache halves the decode
+        # memory term (the KV read dominates params for long contexts)
+        out["kv_scale"] = jnp.zeros((L, B, C, cfg.n_kv, 2), jnp.float32)
+    if cfg.family == "hybrid":
+        di = cfg.n_heads * cfg.head_dim
+        out["ssm"] = jnp.zeros((L, B, di, cfg.ssm_state), jnp.float32)
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, t, *, shard=None,
+                unroll=False, plan=None, moe_spmd=False):
+    """One token: tokens [B,1] -> (logits [B,1,V], new cache).  t: scalar pos."""
+    shard = shard or (lambda x, kind: x)
+    cd = _dt(cfg)
+    x = jnp.take(params["embed"].astype(cd), tokens, axis=0) * float(np.sqrt(cfg.d_model))
+    B = x.shape[0]
+    d = cfg.d_model
+    positions = jnp.full((B, 1), t, jnp.int32)
+    windows = jnp.asarray(cfg.windows(2**31 - 1)) if not cfg.attention_free \
+        else jnp.zeros(cfg.n_layers, jnp.int32)
+
+    if cfg.family == "rwkv":
+        def block(x, inp):
+            p, wkv0, sh_t, sh_c = inp
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            def wkv(r, k, v, w, u):
+                o, s = rwkv_wkv_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], u, wkv0)
+                return o[:, None], s
+            o, wkv1, sh_t1 = _rwkv_time_mix(cfg, p, h, sh_t, wkv)
+            x = x + o
+            h2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+            o2, sh_c1 = _rwkv_channel_mix(cfg, p, h2, sh_c)
+            return x + o2, (wkv1, sh_t1, sh_c1)
+
+        x, (wkv, sh_t, sh_c) = jax.lax.scan(
+            block, x, (params["blocks"], cache["wkv"], cache["shift_t"], cache["shift_c"]),
+            unroll=cfg.n_layers if unroll else 1)
+        new_cache = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+    else:
+        kv = cache["kv"]
+
+        def attn_part(p, x, w, layer_kv, layer_scale=None):
+            h = rms_norm(x, p["ln1"], cfg.rms_eps)
+            q = (h @ p["wq"].astype(cd)).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            k = (h @ p["wk"].astype(cd)).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+            v = (h @ p["wv"].astype(cd)).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            o, layer_kv, layer_scale = decode_attention(
+                q, k, v, layer_kv, t, window=w, cap=cfg.attn_softcap,
+                scales=layer_scale)
+            return (o.reshape(B, 1, -1) @ p["wo"].astype(cd)), layer_kv, h, layer_scale
+
+        if cfg.family == "hybrid":
+            def block(x, inp):
+                p, w, lk, lv, lpos, s0 = inp
+                a, (lk, lv, lpos), h, _ = attn_part(p, x, w, (lk, lv, lpos))
+                s, s1 = _ssm_branch(cfg, p, h, s0)
+                x = x + 0.5 * (a + s)
+                x = x + _mlp_block(cfg, p, x, plan, moe_spmd)
+                return x, (lk, lv, lpos, s1)
+
+            x, (ck, cv, cpos, ssm) = jax.lax.scan(
+                block, x, (params["blocks"], windows, kv.k, kv.v, kv.pos, cache["ssm"]),
+                unroll=cfg.n_layers if unroll else 1)
+            new_cache = {"kv": KVCache(ck, cv, cpos), "ssm": ssm}
+        elif cfg.kv_quant:
+            def block(x, inp):
+                p, w, lk, lv, lpos, lsc = inp
+                a, (lk, lv, lpos), _, lsc = attn_part(p, x, w, (lk, lv, lpos), lsc)
+                x = x + a
+                x = x + _mlp_block(cfg, p, x, plan, moe_spmd)
+                return x, (lk, lv, lpos, lsc)
+
+            x, (ck, cv, cpos, csc) = jax.lax.scan(
+                block, x, (params["blocks"], windows, kv.k, kv.v, kv.pos,
+                           cache["kv_scale"]),
+                unroll=cfg.n_layers if unroll else 1)
+            new_cache = {"kv": KVCache(ck, cv, cpos), "kv_scale": csc}
+        else:
+            def block(x, inp):
+                p, w, lk, lv, lpos = inp
+                a, (lk, lv, lpos), _, _ = attn_part(p, x, w, (lk, lv, lpos))
+                x = x + a
+                x = x + _mlp_block(cfg, p, x, plan, moe_spmd)
+                return x, (lk, lv, lpos)
+
+            x, (ck, cv, cpos) = jax.lax.scan(
+                block, x, (params["blocks"], windows, kv.k, kv.v, kv.pos),
+                unroll=cfg.n_layers if unroll else 1)
+            new_cache = {"kv": KVCache(ck, cv, cpos)}
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["lm_head"].astype(cd)
+    logits = softcap(logits, cfg.final_softcap)
+    return shard(logits, "logits"), new_cache

@@ -1,0 +1,116 @@
+"""train_step / prefill_step / serve_step builders (jit-ready, sharding-aware).
+
+``build_*`` return pure functions suitable for ``jax.jit(...).lower()`` on the
+production mesh (dry-run) and for direct execution in smoke tests (plan=None).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, ShapeCell
+from .model import decode_step, forward, init_cache
+from ..train.optim import AdamWConfig, OptState, adamw_update
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token CE in f32 with bf16 logits; mask [B,S] optional."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, shard=None, unroll=False,
+            cast_early=False, plan=None, moe_spmd=False, window_static=False):
+    logits = forward(cfg, params, batch, shard=shard, unroll=unroll,
+                     cast_early=cast_early, plan=plan, moe_spmd=moe_spmd,
+                     window_static=window_static)
+    if cfg.frontend == "patches":
+        # causal LM loss on the text positions only (patch prefix dropped)
+        n_img = batch["patch_embeds"].shape[1]
+        logits = logits[:, n_img:]
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    return cross_entropy(logits[:, : labels.shape[1]], labels, mask)
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                     shard=None, unroll=False, cast_early=False, plan=None,
+                     moe_spmd=False, window_static=False, master=False):
+    from ..train.optim import adamw_update_master
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, shard=shard, unroll=unroll,
+                              cast_early=cast_early, plan=plan,
+                              moe_spmd=moe_spmd,
+                              window_static=window_static))(params)
+        upd = adamw_update_master if master else adamw_update
+        params, opt_state, stats = upd(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **stats}
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, shard=None, unroll=False,
+                       cast_early=False, plan=None, moe_spmd=False,
+                       window_static=False):
+    def prefill_step(params, batch):
+        logits = forward(cfg, params, batch, shard=shard, remat=False,
+                         unroll=unroll, cast_early=cast_early, plan=plan,
+                         moe_spmd=moe_spmd, window_static=window_static)
+        return logits[:, -1:]          # next-token logits for the request batch
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, shard=None, unroll=False, plan=None,
+                     moe_spmd=False):
+    def serve_step(params, cache, tokens, t):
+        return decode_step(cfg, params, cache, tokens, t, shard=shard,
+                           unroll=unroll, plan=plan, moe_spmd=moe_spmd)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract inputs for a shape cell; no allocation."""
+    S, B = cell.seq_len, cell.global_batch
+    i32 = jnp.int32
+    bf = jnp.dtype(cfg.compute_dtype)
+    sds = jax.ShapeDtypeStruct
+    if cell.kind == "decode":
+        return {"tokens": sds((B, 1), i32)}
+    if cfg.frontend == "frames":
+        # audio stub: precomputed frame embeddings (conv frontend external)
+        return {"frames": sds((B, S, cfg.d_model), bf),
+                "labels": sds((B, S), i32),
+                "mask": sds((B, S), jnp.float32)}
+    if cfg.frontend == "patches":
+        n_img = min(cfg.n_patches, S // 2)
+        return {"tokens": sds((B, S - n_img), i32),
+                "patch_embeds": sds((B, n_img, cfg.d_model), bf),
+                "labels": sds((B, S - n_img), i32)}
+    return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+
+def concrete_inputs(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> dict:
+    """Small concrete batch matching input_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in input_specs(cfg, cell).items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels") else 2
+            out[k] = jnp.asarray(rng.integers(0, hi, size=s.shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape), s.dtype)
+    return out

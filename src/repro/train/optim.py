@@ -1,0 +1,122 @@
+"""Pure-JAX sharded AdamW with global-norm clipping.
+
+Optimizer state mirrors the param tree (same sharding specs), f32 m/v plus
+f32 master weights when params are kept in bf16.  No optax dependency —
+the container has none and the math is ten lines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+class MasterOptState(NamedTuple):
+    """bf16-weights variant: f32 master copy lives in the optimizer state so
+    every FSDP weight all-gather in fwd/bwd moves bf16 (2x wire bytes)."""
+    m: dict
+    v: dict
+    master: dict
+    step: jnp.ndarray
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(zeros, jax.tree_util.tree_map(jnp.copy, zeros), jnp.zeros((), jnp.int32))
+
+
+def init_master_opt_state(params) -> MasterOptState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return MasterOptState(zeros, jax.tree_util.tree_map(jnp.copy, zeros),
+                          master, jnp.zeros((), jnp.int32))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    # global-norm clip in f32
+    g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    # NB: sum(g*g) NOT vdot — vdot flattens, and GSPMD cannot shard the
+    # flattening reshape of a 2D-sharded gradient, so it all-gathers every
+    # grad leaf in f32 (measured: the single largest collective in the
+    # baseline train step).  Elementwise square + reduce stays sharded.
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(g32)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+    step = state.step + 1
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(g32)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"grad_norm": gnorm, "lr": lr}
+
+
+def adamw_update_master(cfg: AdamWConfig, params, grads, state: MasterOptState):
+    """AdamW on the f32 master copy; returns fresh bf16 model weights."""
+    g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(g32)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    step = state.step + 1
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p_model, g, m, v, master):
+        g = g * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        master = master - lr * ((m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+                                + cfg.weight_decay * master)
+        return master.astype(p_model.dtype), m, v, master
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    out = [upd(p, g, m, v, mw) for p, g, m, v, mw in zip(
+        flat_p, jax.tree_util.tree_leaves(g32),
+        jax.tree_util.tree_leaves(state.m), jax.tree_util.tree_leaves(state.v),
+        jax.tree_util.tree_leaves(state.master))]
+    new_p = tdef.unflatten([o[0] for o in out])
+    return new_p, MasterOptState(
+        tdef.unflatten([o[1] for o in out]), tdef.unflatten([o[2] for o in out]),
+        tdef.unflatten([o[3] for o in out]), step), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,107 @@
+"""Unit + property tests for the Burdakov epsilon-norm evaluators."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.epsilon_norm import (epsilon_norm_exact, epsilon_norm_bisect,
+                                     epsilon_dual_norm, _phi)
+
+
+def brute_force_eps_norm(x, eps, tol=1e-12):
+    """Scalar bisection oracle in float64 numpy."""
+    a = np.abs(np.asarray(x, dtype=np.float64))
+    if a.max() == 0:
+        return 0.0
+    if eps <= 0:
+        return a.max()
+    lo, hi = a.max(), max(np.linalg.norm(a) / eps, a.max())
+
+    def phi(q):
+        r = np.maximum(a - (1 - eps) * q, 0.0)
+        return np.sum(r * r) - (eps * q) ** 2
+
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if phi(mid) > 0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 7, 16, 100])
+@pytest.mark.parametrize("eps", [0.05, 0.3, 0.7, 0.95])
+def test_exact_matches_brute_force(d, eps):
+    rng = np.random.default_rng(d * 100 + int(eps * 10))
+    x = rng.normal(size=(d,)).astype(np.float32)
+    got = float(epsilon_norm_exact(jnp.asarray(x), jnp.asarray(eps, jnp.float32)))
+    want = brute_force_eps_norm(x, eps)
+    assert got == pytest.approx(want, rel=2e-5, abs=1e-6)
+
+
+@pytest.mark.parametrize("method", ["exact", "bisect"])
+def test_limits(method):
+    """eps->0 gives inf-norm, eps->1 gives l2-norm."""
+    x = jnp.asarray([3.0, -4.0, 1.0])
+    fn = epsilon_norm_exact if method == "exact" else epsilon_norm_bisect
+    assert float(fn(x, jnp.asarray(0.0))) == pytest.approx(4.0)
+    assert float(fn(x, jnp.asarray(1.0))) == pytest.approx(float(jnp.linalg.norm(x)), rel=1e-6)
+
+
+def test_batched_with_mask():
+    rng = np.random.default_rng(0)
+    m, d = 11, 13
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    sizes = rng.integers(1, d + 1, size=m)
+    mask = np.arange(d)[None, :] < sizes[:, None]
+    eps = rng.uniform(0.1, 0.9, size=m).astype(np.float32)
+    got = np.asarray(epsilon_norm_exact(jnp.asarray(x), jnp.asarray(eps), jnp.asarray(mask)))
+    for i in range(m):
+        want = brute_force_eps_norm(x[i, : sizes[i]], eps[i])
+        assert got[i] == pytest.approx(want, rel=3e-5, abs=1e-6), i
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 30), st.floats(0.01, 0.99), st.integers(0, 2**31 - 1))
+def test_property_exact_vs_bisect(d, eps, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(d,)) * 10.0 ** rng.integers(-2, 3)).astype(np.float32)
+    e = jnp.asarray(eps, jnp.float32)
+    a = float(epsilon_norm_exact(jnp.asarray(x), e))
+    b = float(epsilon_norm_bisect(jnp.asarray(x), e))
+    assert a == pytest.approx(b, rel=2e-4, abs=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 20), st.floats(0.05, 0.95), st.integers(0, 2**31 - 1))
+def test_property_root_is_zero_of_phi(d, eps, seed):
+    """The returned q really is a root of phi (the norm's defining equation)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(d,)).astype(np.float32)
+    q = epsilon_norm_exact(jnp.asarray(x), jnp.asarray(eps, jnp.float32))
+    val = float(_phi(q[None], jnp.abs(jnp.asarray(x))[None, :],
+                     jnp.asarray([eps], jnp.float32), jnp.ones((1, d), bool))[0])
+    scale = float(jnp.sum(jnp.asarray(x) ** 2)) + 1e-6
+    assert abs(val) / scale < 1e-3
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 16), st.floats(0.05, 0.95), st.integers(0, 2**31 - 1))
+def test_property_duality(d, eps, seed):
+    """Holder: |<x, z>| <= ||x||_eps * ||z||*_eps, tight for z = argmax."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(d,)).astype(np.float32)
+    z = rng.normal(size=(d,)).astype(np.float32)
+    e = jnp.asarray(eps, jnp.float32)
+    nx = float(epsilon_norm_exact(jnp.asarray(x), e))
+    nz = float(epsilon_dual_norm(jnp.asarray(z), e))
+    assert abs(float(np.dot(x, z))) <= nx * nz * (1 + 1e-4) + 1e-6
+
+
+def test_scaling_homogeneity():
+    x = jnp.asarray([1.0, -2.0, 0.5, 3.0])
+    e = jnp.asarray(0.4)
+    n1 = float(epsilon_norm_exact(x, e))
+    n2 = float(epsilon_norm_exact(7.5 * x, e))
+    assert n2 == pytest.approx(7.5 * n1, rel=1e-5)

@@ -1,0 +1,140 @@
+"""Per-kernel correctness: interpret-mode Pallas vs pure-jnp oracle.
+
+Every kernel is swept over shapes and dtypes and asserted allclose against
+its ref.py oracle (the assignment's per-kernel contract).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GroupInfo, Penalty, sgl_prox, gradient, Problem
+from repro.core.epsilon_norm import epsilon_norm_bisect
+from repro.core.penalties import sgl_eps, asgl_prox
+from repro.kernels import ref as kref
+from repro.kernels.epsilon_norm import epsilon_norm_padded
+from repro.kernels.group_norms import group_norms_padded
+from repro.kernels.sgl_prox import sgl_prox_padded
+from repro.kernels.xt_resid import xt_resid
+from repro.kernels.ops import (group_epsilon_norms, sgl_prox_flat,
+                               group_screen_stats, screen_gradient)
+
+SHAPES = [(1, 3), (5, 17), (8, 128), (13, 200), (64, 64), (3, 1)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_epsilon_norm_kernel_sweep(m, d, dtype):
+    rng = np.random.default_rng(m * 1000 + d)
+    x = jnp.asarray(rng.normal(size=(m, d)) * 3, dtype)
+    eps = jnp.asarray(rng.uniform(0.05, 0.95, size=m), jnp.float32)
+    got = epsilon_norm_padded(x, eps, interpret=True)
+    want = kref.epsilon_norm_padded_ref(x, eps)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sgl_prox_kernel_sweep(m, d, dtype):
+    rng = np.random.default_rng(m * 991 + d)
+    z = jnp.asarray(rng.normal(size=(m, d)) * 2, dtype)
+    t1 = jnp.asarray(rng.uniform(0, 0.5, size=(m, d)), jnp.float32)
+    t2 = jnp.asarray(rng.uniform(0, 1.0, size=m), jnp.float32)
+    got = sgl_prox_padded(z, t1, t2, interpret=True)
+    want = kref.sgl_prox_padded_ref(z, t1, t2)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_group_norms_kernel_sweep(m, d, dtype):
+    rng = np.random.default_rng(m * 7 + d)
+    z = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    thr = jnp.asarray(rng.uniform(0, 0.8, size=m), jnp.float32)
+    got = group_norms_padded(z, thr, interpret=True)
+    want = kref.group_norms_padded_ref(z, thr)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,p", [(7, 5), (64, 128), (100, 300), (256, 512), (33, 1)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_xt_resid_kernel_sweep(n, p, dtype):
+    rng = np.random.default_rng(n + p)
+    X = jnp.asarray(rng.normal(size=(n, p)), dtype)
+    r = jnp.asarray(rng.normal(size=n), jnp.float32)
+    got = xt_resid(X, r, block_n=32, block_p=128, interpret=True)
+    want = kref.xt_resid_ref(X, r)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flat-vector wrappers vs the core library (the integration contract)
+# ---------------------------------------------------------------------------
+
+def test_group_epsilon_norms_matches_core():
+    rng = np.random.default_rng(0)
+    g = GroupInfo.from_sizes([3, 50, 7, 100, 1])
+    z = jnp.asarray(rng.normal(size=g.p), jnp.float32)
+    eps = sgl_eps(g, 0.95)
+    got = group_epsilon_norms(z, g, eps)
+    from repro.core.groups import to_padded
+    zp, mask = to_padded(z, g)
+    want = epsilon_norm_bisect(zp, eps, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.5, 0.95, 1.0])
+def test_sgl_prox_flat_matches_core(alpha):
+    rng = np.random.default_rng(1)
+    g = GroupInfo.from_sizes([4, 9, 2, 30])
+    z = jnp.asarray(rng.normal(size=g.p) * 2, jnp.float32)
+    got = sgl_prox_flat(z, 0.3, g, alpha)
+    want = sgl_prox(z, 0.3, g, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_asgl_prox_flat_matches_core():
+    rng = np.random.default_rng(2)
+    g = GroupInfo.from_sizes([4, 9, 2])
+    z = jnp.asarray(rng.normal(size=g.p) * 2, jnp.float32)
+    v = jnp.asarray(rng.uniform(0.3, 2, g.p), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.3, 2, g.m), jnp.float32)
+    got = sgl_prox_flat(z, 0.2, g, 0.9, v, w)
+    want = asgl_prox(z, 0.2, g, 0.9, v, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_screen_gradient_matches_core():
+    rng = np.random.default_rng(3)
+    n, p = 50, 230
+    X = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    beta = jnp.zeros(p)
+    y = jnp.asarray(rng.normal(size=n), jnp.float32)
+    prob = Problem(X, y, "linear", False)
+    r = y - X @ beta
+    got = screen_gradient(X, r)
+    want = gradient(prob, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+
+def test_end_to_end_kernel_screening_path():
+    """fit_path(eps_method='kernel') must match 'exact' decisions exactly."""
+    from repro.core import fit_path
+    rng = np.random.default_rng(11)
+    g = GroupInfo.from_sizes([10] * 8)
+    X = jnp.asarray(rng.normal(size=(40, g.p)), jnp.float32)
+    beta = np.zeros(g.p); beta[:3] = [2.0, -1.5, 1.0]
+    y = jnp.asarray(X @ beta + 0.3 * rng.normal(size=40), jnp.float32)
+    prob = Problem(X, y, "linear", True)
+    pen = Penalty(g, 0.95)
+    r_k = fit_path(prob, pen, screen="dfr", length=8, term=0.2, eps_method="kernel")
+    r_e = fit_path(prob, pen, screen="dfr", length=8, term=0.2, eps_method="exact")
+    assert r_k.metrics["opt_v"] == r_e.metrics["opt_v"]
+    np.testing.assert_allclose(r_k.betas, r_e.betas, atol=1e-6)

@@ -1,0 +1,212 @@
+"""Architecture-zoo smoke + consistency tests (reduced configs, CPU).
+
+Per assignment: every arch instantiates a REDUCED config of the same family
+and runs a forward/train step asserting shapes + no NaNs.  Beyond that, the
+decode path is validated against the full forward (incremental == parallel),
+which exercises ring-buffer caches, windows, RWKV/SSM states.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get, get_reduced
+from repro.models import (init_params, forward, init_cache, decode_step,
+                          build_train_step, build_prefill_step, concrete_inputs,
+                          input_specs, param_count, abstract_params)
+from repro.models.config import SHAPES, ShapeCell, applicable_cells
+from repro.train import init_opt_state, AdamWConfig
+
+
+def small_cell(kind="train", S=32, B=2):
+    return ShapeCell("small", S, B, kind)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_reduced(arch)
+    cell = small_cell()
+    batch = concrete_inputs(cfg, cell)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    logits = forward(cfg, params, batch)
+    S_out = cell.seq_len
+    assert logits.shape == (cell.global_batch, S_out, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_reduced(arch)
+    batch = concrete_inputs(cfg, small_cell())
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(build_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1)))
+    params2, opt2, stats = step(params, opt, batch)
+    assert np.isfinite(float(stats["loss"]))
+    assert float(stats["grad_norm"]) > 0
+    # params actually moved
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree_util.tree_leaves(params),
+                               jax.tree_util.tree_leaves(params2)))
+    assert diff > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_training_reduces_loss(arch):
+    """A few steps on a repeated batch must reduce the loss (learnability)."""
+    cfg = get_reduced(arch)
+    batch = concrete_inputs(cfg, small_cell())
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    opt = init_opt_state(params)
+    step = jax.jit(build_train_step(cfg, AdamWConfig(lr=3e-3, warmup_steps=1)))
+    losses = []
+    for _ in range(8):
+        params, opt, stats = step(params, opt, batch)
+        losses.append(float(stats["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if get(a).family != "encoder"])
+def test_decode_matches_forward(arch):
+    """Incremental decode == parallel forward (cache correctness)."""
+    cfg = get_reduced(arch)
+    if cfg.frontend == "patches":
+        cfg = dataclasses.replace(cfg, frontend="tokens")
+    if cfg.n_experts:
+        # no-drop capacity: batched forward drops overflow tokens, decode
+        # (T=1) never does — equivalence needs drop-free routing
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    B, S = 2, 16
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    ref = forward(cfg, params, {"tokens": toks}, remat=False)
+
+    cache = init_cache(cfg, B, S)
+    dec = jax.jit(lambda p, c, tok, t: decode_step(cfg, p, c, tok, t))
+    outs = []
+    for t in range(S):
+        logits, cache = dec(params, cache, toks[:, t:t + 1], jnp.asarray(t))
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, axis=1).astype(jnp.float32)
+    want = ref.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0.05, atol=0.05)
+
+
+def test_ring_buffer_window_decode():
+    """Sliding-window arch decoding past the window must match a forward whose
+    attention is windowed (mixtral ring cache)."""
+    cfg = get_reduced("mixtral_8x22b")   # window 16 in reduced config
+    cfg = dataclasses.replace(cfg, attn_pattern="local:8",
+                              capacity_factor=float(get_reduced("mixtral_8x22b").n_experts))
+    B, S = 1, 24                          # S > window: ring wraps
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    ref = forward(cfg, params, {"tokens": toks}, remat=False)
+    cache = init_cache(cfg, B, S)
+    assert cache["kv"].k.shape[2] == 8    # ring is window-sized, not S
+    dec = jax.jit(lambda p, c, tok, t: decode_step(cfg, p, c, tok, t))
+    outs = []
+    for t in range(S):
+        logits, cache = dec(params, cache, toks[:, t:t + 1], jnp.asarray(t))
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, axis=1).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_local_global_patterns():
+    from repro.configs import get as gf
+    g2 = gf("gemma2-9b")
+    w = g2.windows(32768)
+    assert w[0] == 4096 and w[1] == 32768        # local first, alternating
+    g3 = gf("gemma3-27b")
+    w3 = g3.windows(32768)
+    assert (w3[:5] == 1024).all() and w3[5] == 32768   # 5 local : 1 global
+    assert not g2.sub_quadratic and not g3.sub_quadratic
+    assert gf("mixtral-8x22b").sub_quadratic and gf("rwkv6-7b").sub_quadratic
+
+
+def test_applicable_cells_rules():
+    assert applicable_cells(get("hubert-xlarge")) == ["train_4k", "prefill_32k"]
+    assert "long_500k" in applicable_cells(get("rwkv6-7b"))
+    assert "long_500k" not in applicable_cells(get("deepseek-67b"))
+    # 40 assigned cells; skips documented in DESIGN.md
+    total = sum(len(applicable_cells(get(a))) for a in ARCHS)
+    assert total == 32
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_cells(arch):
+    cfg = get(arch)
+    for cell_name in applicable_cells(cfg):
+        specs = input_specs(cfg, SHAPES[cell_name])
+        assert all(hasattr(s, "shape") for s in specs.values())
+        if SHAPES[cell_name].kind == "decode":
+            assert specs["tokens"].shape == (SHAPES[cell_name].global_batch, 1)
+
+
+def test_param_counts_match_nameplates():
+    expect = {"mixtral-8x22b": 141e9, "dbrx-132b": 132e9, "deepseek-67b": 67e9,
+              "gemma2-27b": 27e9, "gemma2-9b": 9e9, "rwkv6-7b": 7.5e9,
+              "hymba-1.5b": 1.5e9, "gemma3-27b": 27e9, "internvl2-76b": 70e9,
+              "hubert-xlarge": 1e9}
+    for a in ARCHS:
+        cfg = get(a)
+        n = param_count(abstract_params(cfg))
+        assert 0.65 * expect[cfg.name] < n < 1.45 * expect[cfg.name], (cfg.name, n)
+
+
+def test_int8_kv_cache_decode():
+    """kv_quant serving variant: int8 cache, logits within quantization tol."""
+    cfg = dataclasses.replace(get_reduced("gemma2_9b"), kv_quant=True)
+    B, S = 2, 12
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    ref = forward(cfg, params, {"tokens": toks}, remat=False)
+    cache = init_cache(cfg, B, S)
+    assert cache["kv"].k.dtype == jnp.int8 and "kv_scale" in cache
+    dec = jax.jit(lambda p, c, tok, t: decode_step(cfg, p, c, tok, t))
+    outs = []
+    for t in range(S):
+        logits, cache = dec(params, cache, toks[:, t:t + 1], jnp.asarray(t))
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, 1).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref, np.float32),
+                               rtol=0.3, atol=0.3)
+
+
+def test_window_static_variant_matches_baseline():
+    cfg = get_reduced("gemma3_27b")
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 48)), jnp.int32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    l0 = forward(cfg, params, {"tokens": toks}, remat=False)
+    l1 = forward(cfg, params, {"tokens": toks}, remat=False, window_static=True)
+    np.testing.assert_allclose(np.asarray(l0, np.float32),
+                               np.asarray(l1, np.float32), atol=1e-5)
+
+
+def test_master_optimizer_matches_plain_adamw():
+    """bf16params variant: master-f32 AdamW tracks plain f32 AdamW closely."""
+    from repro.train.optim import (AdamWConfig, adamw_update,
+                                   adamw_update_master, init_master_opt_state,
+                                   init_opt_state)
+    rng = np.random.default_rng(0)
+    p32 = {"w": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+    pbf = jax.tree_util.tree_map(lambda x: x.astype(jnp.bfloat16), p32)
+    o32, obf = init_opt_state(p32), init_master_opt_state(pbf)
+    # start both trajectories from the identical f32 point (the bf16 cast of
+    # the initial weights is a one-time rounding, not optimizer drift)
+    obf = obf._replace(master=jax.tree_util.tree_map(jnp.copy, p32))
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=1)
+    for i in range(10):
+        g = {"w": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+        p32, o32, _ = adamw_update(cfg, p32, g, o32)
+        pbf, obf, _ = adamw_update_master(cfg, pbf, g.copy(), obf)
+    d = float(jnp.max(jnp.abs(p32["w"] - obf.master["w"])))
+    assert d < 1e-5, d            # master copy == plain f32 trajectory

@@ -1,0 +1,141 @@
+"""Tests for SGL/aSGL norms, dual norms, and proxes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GroupInfo, Penalty, sgl_norm, sgl_prox, sgl_dual_norm,
+                        asgl_norm, asgl_prox, soft_threshold)
+from repro.core.penalties import asgl_gamma_eps, sgl_tau, sgl_eps
+from repro.core.epsilon_norm import epsilon_dual_norm
+from repro.core.groups import to_padded
+
+
+def rand_groups(rng, m_max=6, size_max=8):
+    m = int(rng.integers(1, m_max + 1))
+    sizes = rng.integers(1, size_max + 1, size=m)
+    return GroupInfo.from_sizes(sizes)
+
+
+def numpy_sgl_norm(beta, sizes, alpha):
+    out = alpha * np.abs(beta).sum()
+    o = 0
+    for s in sizes:
+        out += (1 - alpha) * np.sqrt(s) * np.linalg.norm(beta[o:o + s])
+        o += s
+    return out
+
+
+def test_sgl_norm_matches_numpy():
+    rng = np.random.default_rng(0)
+    g = GroupInfo.from_sizes([3, 5, 2, 7])
+    beta = rng.normal(size=(g.p,)).astype(np.float32)
+    got = float(sgl_norm(jnp.asarray(beta), g, 0.7))
+    want = numpy_sgl_norm(beta, [3, 5, 2, 7], 0.7)
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_sgl_norm_via_epsilon_decomposition():
+    """Eq. 3: ||b||_sgl = sum_g tau_g * dual-eps-norm of b^(g)."""
+    rng = np.random.default_rng(1)
+    g = GroupInfo.from_sizes([4, 1, 6])
+    alpha = 0.95
+    beta = rng.normal(size=(g.p,)).astype(np.float32)
+    bp, mask = to_padded(jnp.asarray(beta), g)
+    dual = epsilon_dual_norm(bp, sgl_eps(g, alpha), mask)
+    via_eps = float(jnp.sum(sgl_tau(g, alpha) * dual))
+    assert via_eps == pytest.approx(float(sgl_norm(jnp.asarray(beta), g, alpha)), rel=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.0))
+def test_property_prox_optimality(seed, alpha):
+    """prox output z* satisfies 0 in z* - x + t*subdiff(Omega)(z*): check via
+    the prox characterization  Omega(u) >= Omega(z) + <(x - z)/t, u - z>  for
+    random u (variational inequality of the prox)."""
+    rng = np.random.default_rng(seed)
+    g = rand_groups(rng)
+    x = rng.normal(size=(g.p,)).astype(np.float32) * 3
+    t = float(rng.uniform(0.05, 2.0))
+    z = sgl_prox(jnp.asarray(x), t, g, alpha)
+    sub = (jnp.asarray(x) - z) / t
+    for _ in range(5):
+        u = jnp.asarray(rng.normal(size=(g.p,)).astype(np.float32) * 3)
+        lhs = float(sgl_norm(u, g, alpha))
+        rhs = float(sgl_norm(z, g, alpha)) + float(jnp.dot(sub, u - z))
+        assert lhs >= rhs - 1e-3 * max(1.0, abs(rhs))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.0))
+def test_property_asgl_prox_optimality(seed, alpha):
+    rng = np.random.default_rng(seed)
+    g = rand_groups(rng)
+    v = jnp.asarray(rng.uniform(0.2, 3.0, size=g.p).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.2, 3.0, size=g.m).astype(np.float32))
+    x = rng.normal(size=(g.p,)).astype(np.float32) * 3
+    t = float(rng.uniform(0.05, 2.0))
+    z = asgl_prox(jnp.asarray(x), t, g, alpha, v, w)
+    sub = (jnp.asarray(x) - z) / t
+    for _ in range(5):
+        u = jnp.asarray(rng.normal(size=(g.p,)).astype(np.float32) * 3)
+        lhs = float(asgl_norm(u, g, alpha, v, w))
+        rhs = float(asgl_norm(z, g, alpha, v, w)) + float(jnp.dot(sub, u - z))
+        assert lhs >= rhs - 1e-3 * max(1.0, abs(rhs))
+
+
+def test_prox_reductions():
+    """alpha=1 -> pure soft threshold; alpha=0 -> pure group shrink."""
+    rng = np.random.default_rng(3)
+    g = GroupInfo.from_sizes([4, 4])
+    x = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    t = 0.3
+    np.testing.assert_allclose(np.asarray(sgl_prox(x, t, g, 1.0)),
+                               np.asarray(soft_threshold(x, t)), rtol=1e-6)
+    z0 = np.asarray(sgl_prox(x, t, g, 0.0))
+    for gi in range(2):
+        seg = np.asarray(x)[gi * 4:(gi + 1) * 4]
+        nrm = np.linalg.norm(seg)
+        want = max(0, 1 - t * 2.0 / nrm) * seg   # sqrt(4) = 2
+        np.testing.assert_allclose(z0[gi * 4:(gi + 1) * 4], want, rtol=1e-5)
+
+
+def test_dual_norm_is_dual():
+    """||z||* = sup <z,x> / ||x||_sgl — check against random candidates."""
+    rng = np.random.default_rng(4)
+    g = GroupInfo.from_sizes([3, 2, 4])
+    alpha = 0.6
+    z = jnp.asarray(rng.normal(size=(g.p,)).astype(np.float32))
+    dn = float(sgl_dual_norm(z, g, alpha))
+    best = 0.0
+    for _ in range(3000):
+        x = rng.normal(size=(g.p,))
+        best = max(best, abs(np.dot(np.asarray(z), x)) / numpy_sgl_norm(x, [3, 2, 4], alpha))
+    assert dn >= best - 1e-4            # dual norm dominates every candidate
+    assert dn <= best * 1.35 + 1e-6     # and random search gets close
+
+
+def test_asgl_gamma_reduces_to_tau():
+    """v = w = 1 must give gamma_g = tau_g and eps' = eps (Appendix B.1.1)."""
+    rng = np.random.default_rng(5)
+    g = GroupInfo.from_sizes([5, 3, 8])
+    alpha = 0.95
+    beta = jnp.asarray(rng.normal(size=(g.p,)).astype(np.float32))
+    v = jnp.ones((g.p,))
+    w = jnp.ones((g.m,))
+    gamma, eps = asgl_gamma_eps(beta, g, alpha, v, w)
+    np.testing.assert_allclose(np.asarray(gamma), np.asarray(sgl_tau(g, alpha)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(eps), np.asarray(sgl_eps(g, alpha)), rtol=1e-6)
+
+
+def test_asgl_gamma_zero_beta_limit():
+    """beta = 0 -> gamma_g = alpha*mean(v^(g)) + (1-alpha) w_g sqrt(p_g)."""
+    rng = np.random.default_rng(6)
+    g = GroupInfo.from_sizes([4, 6])
+    alpha = 0.8
+    v = jnp.asarray(rng.uniform(0.5, 2.0, size=g.p).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=g.m).astype(np.float32))
+    gamma, _ = asgl_gamma_eps(jnp.zeros((g.p,)), g, alpha, v, w)
+    want = alpha * np.asarray([np.mean(np.asarray(v)[:4]), np.mean(np.asarray(v)[4:])]) \
+        + (1 - alpha) * np.asarray(w) * np.sqrt([4, 6])
+    np.testing.assert_allclose(np.asarray(gamma), want, rtol=1e-5)

@@ -1,0 +1,127 @@
+"""Screening-rule behaviour: supersets, exactness of GAP-safe, path equality."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GroupInfo, Penalty, Problem, fit_path, gradient,
+                        pca_weights, standardize, solve)
+from repro.core.screening import dfr_screen, dfr_screen_asgl, sparsegl_screen, gap_safe_screen
+
+
+def synth(seed=0, n=60, p=120, m=12, loss="linear", active_groups=3, snr=2.0):
+    rng = np.random.default_rng(seed)
+    sizes = [p // m] * m
+    g = GroupInfo.from_sizes(sizes)
+    X = standardize(rng.normal(size=(n, p)))
+    beta = np.zeros(p)
+    for gi in rng.choice(m, active_groups, replace=False):
+        s = gi * (p // m)
+        k = max(1, (p // m) // 3)
+        beta[s:s + k] = rng.normal(0, snr, k)
+    eta = X @ beta
+    if loss == "linear":
+        y = eta + 0.4 * rng.normal(size=n)
+    else:
+        y = (rng.uniform(size=n) < 1 / (1 + np.exp(-eta))).astype(float)
+    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32), loss, True)
+    return prob, g
+
+
+@pytest.mark.parametrize("loss", ["linear", "logistic"])
+@pytest.mark.parametrize("mode", ["dfr", "sparsegl"])
+def test_screened_path_equals_unscreened(loss, mode):
+    """The paper's core claim: screening changes nothing about the solution."""
+    prob, g = synth(loss=loss)
+    pen = Penalty(g, 0.95)
+    r0 = fit_path(prob, pen, screen=None, length=15, term=0.15, tol=1e-6)
+    r1 = fit_path(prob, pen, screen=mode, length=15, term=0.15, tol=1e-6)
+    fits0 = np.asarray(prob.X) @ r0.betas.T
+    fits1 = np.asarray(prob.X) @ r1.betas.T
+    assert np.max(np.abs(fits0 - fits1)) < 5e-3
+
+
+def test_asgl_screened_path_equals_unscreened():
+    prob, g = synth(seed=3)
+    v, w = pca_weights(prob.X, g, 0.1, 0.1)
+    pen = Penalty(g, 0.95, v, w)
+    r0 = fit_path(prob, pen, screen=None, length=12, term=0.2, tol=1e-6)
+    r1 = fit_path(prob, pen, screen="dfr", length=12, term=0.2, tol=1e-6)
+    fits0 = np.asarray(prob.X) @ r0.betas.T
+    fits1 = np.asarray(prob.X) @ r1.betas.T
+    assert np.max(np.abs(fits0 - fits1)) < 5e-3
+    assert np.mean(r1.metrics["opt_prop_v"]) < 0.5
+
+
+def test_candidate_superset_of_active():
+    """Prop 2.2/2.4: O_v always contains the next active set (tracked by driver)."""
+    prob, g = synth(seed=1)
+    pen = Penalty(g, 0.95)
+    r = fit_path(prob, pen, screen="dfr", length=20, term=0.1, tol=1e-6)
+    for av, ov in zip(r.metrics["active_v"], r.metrics["opt_v"]):
+        assert av <= ov
+    for ag, og in zip(r.metrics["active_g"], r.metrics["opt_g"]):
+        assert ag <= og
+
+
+def test_dfr_tighter_than_sparsegl():
+    """Bi-level screening keeps fewer variables (paper Fig. 3)."""
+    prob, g = synth(seed=2)
+    pen = Penalty(g, 0.95)
+    r_d = fit_path(prob, pen, screen="dfr", length=15, term=0.1)
+    r_s = fit_path(prob, pen, screen="sparsegl", length=15, term=0.1)
+    assert np.mean(r_d.metrics["opt_prop_v"]) < np.mean(r_s.metrics["opt_prop_v"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_gap_safe_never_discards_active(seed):
+    """Exactness of the sphere test: every active variable survives."""
+    prob, g = synth(seed=seed, n=40, p=60, m=6)
+    pen = Penalty(g, 0.9)
+    lam1 = 0.9 * float(jnp.max(jnp.abs(gradient(prob, jnp.zeros(prob.p), jnp.mean(prob.y)))))
+    lam = 0.5 * lam1
+    # reference solution at a nearby lambda (sequential screening setting)
+    ref = solve(prob, pen, lam * 1.2, max_iters=8000, tol=1e-7)
+    keep = gap_safe_screen(prob.X, prob.y, ref.beta, pen, lam)
+    sol = solve(prob, pen, lam, max_iters=8000, tol=1e-7)
+    active = np.asarray(jnp.abs(sol.beta) > 1e-6)
+    assert not np.any(active & ~np.asarray(keep.keep_vars))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.3, 0.8, 0.95]))
+def test_property_strong_rules_rarely_violate_and_kkt_catches(seed, alpha):
+    """Run DFR path; KKT loop must leave a solution with no violations."""
+    prob, g = synth(seed=seed, n=30, p=60, m=6)
+    pen = Penalty(g, alpha)
+    r = fit_path(prob, pen, screen="dfr", length=8, term=0.2, tol=1e-6)
+    # after the KKT loop the recorded solution must satisfy KKT at each point
+    from repro.core import kkt_violations
+    for k in range(1, len(r.lambdas)):
+        grad = gradient(prob, jnp.asarray(r.betas[k]), r.intercepts[k])
+        viol = kkt_violations(grad + 0.0, pen, r.lambdas[k],
+                              jnp.asarray(np.abs(r.betas[k]) > 0))
+        # tolerance: f32 solver at tol 1e-6
+        assert int(jnp.sum(viol)) <= max(1, int(0.02 * prob.p))
+
+
+def test_alpha_one_reduces_to_lasso_strong_rule():
+    prob, g = synth(seed=7)
+    pen = Penalty(g, 1.0)
+    grad = gradient(prob, jnp.zeros(prob.p), jnp.mean(prob.y))
+    lam_k, lam = 0.1, 0.08
+    res = dfr_screen(grad, pen, lam_k, lam)
+    want = np.abs(np.asarray(grad)) > (2 * lam - lam_k)
+    np.testing.assert_array_equal(np.asarray(res.keep_vars), want)
+
+
+def test_alpha_zero_reduces_to_group_lasso_strong_rule():
+    prob, g = synth(seed=8)
+    pen = Penalty(g, 0.0)
+    grad = gradient(prob, jnp.zeros(prob.p), jnp.mean(prob.y))
+    lam_k, lam = 0.1, 0.08
+    res = dfr_screen(grad, pen, lam_k, lam)
+    gl2 = np.sqrt(np.add.reduceat(np.asarray(grad) ** 2, np.arange(0, prob.p, prob.p // g.m)))
+    want = gl2 > np.sqrt(prob.p // g.m) * (2 * lam - lam_k)
+    np.testing.assert_array_equal(np.asarray(res.keep_groups), want)

@@ -1,0 +1,107 @@
+"""Solver correctness: closed forms, cross-solver agreement, logistic loss."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GroupInfo, Penalty, Problem, solve, loss_value,
+                        standardize, kkt_violations, gradient)
+
+
+def make_problem(seed=0, n=50, p=40, sizes=(10, 10, 10, 10), loss="linear",
+                 snr=3.0, intercept=False):
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes(list(sizes))
+    X = standardize(rng.normal(size=(n, p)))
+    beta = np.zeros(p)
+    beta[: sizes[0] // 2] = rng.normal(0, snr, sizes[0] // 2)
+    eta = X @ beta
+    if loss == "linear":
+        y = eta + 0.3 * rng.normal(size=n)
+    else:
+        y = (rng.uniform(size=n) < 1 / (1 + np.exp(-eta))).astype(np.float64)
+    return Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+                   loss, intercept), g
+
+
+def objective(prob, pen, lam, beta, c):
+    return float(loss_value(prob, beta, c) + lam * pen.value(beta))
+
+
+@pytest.mark.parametrize("loss", ["linear", "logistic"])
+@pytest.mark.parametrize("solver", ["fista", "atos"])
+def test_solution_satisfies_kkt(loss, solver):
+    prob, g = make_problem(loss=loss)
+    pen = Penalty(g, 0.95)
+    lam = 0.05 if loss == "linear" else 0.02
+    res = solve(prob, pen, lam, solver=solver, max_iters=20000, tol=1e-6)
+    assert bool(res.converged)
+    grad = gradient(prob, res.beta, res.intercept)
+    viol = kkt_violations(grad, pen, lam, jnp.zeros((prob.p,), bool))
+    # allow a tiny slack for f32 convergence
+    from repro.core.penalties import soft_threshold
+    w = g.sqrt_sizes[g.group_id]
+    lhs = jnp.abs(soft_threshold(grad, lam * (1 - 0.95) * w))
+    assert float(jnp.max(lhs)) <= lam * 0.95 + 5e-4
+
+
+def test_fista_vs_atos_objective():
+    prob, g = make_problem(seed=2)
+    pen = Penalty(g, 0.9)
+    lam = 0.03
+    rf = solve(prob, pen, lam, solver="fista", max_iters=30000, tol=1e-8)
+    ra = solve(prob, pen, lam, solver="atos", max_iters=30000, tol=1e-8)
+    of = objective(prob, pen, lam, rf.beta, rf.intercept)
+    oa = objective(prob, pen, lam, ra.beta, ra.intercept)
+    assert of == pytest.approx(oa, abs=5e-5)
+
+
+def test_lasso_closed_form_orthogonal():
+    """alpha=1 with orthonormal X: beta = S(X'y/n, lam)."""
+    rng = np.random.default_rng(3)
+    n, p = 64, 16
+    Q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    X = Q[:, :p] * np.sqrt(n)          # X'X = n I
+    beta_true = rng.normal(size=p)
+    y = X @ beta_true
+    g = GroupInfo.from_sizes([1] * p)
+    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+                   "linear", False)
+    pen = Penalty(g, 1.0)
+    lam = 0.4
+    res = solve(prob, pen, lam, max_iters=20000, tol=1e-7)
+    xty = X.T @ y / n
+    want = np.sign(xty) * np.maximum(np.abs(xty) - lam, 0)
+    np.testing.assert_allclose(np.asarray(res.beta), want, atol=5e-4)
+
+
+def test_group_lasso_kills_whole_groups():
+    prob, g = make_problem(seed=4, snr=2.0)
+    pen = Penalty(g, 0.0)
+    res = solve(prob, pen, 0.08, max_iters=20000, tol=1e-7)
+    b = np.asarray(res.beta).reshape(4, 10)
+    group_active = np.linalg.norm(b, axis=1) > 0
+    # groups are either fully zero or (generically) fully dense
+    for i in range(4):
+        if group_active[i]:
+            assert np.mean(b[i] != 0) > 0.8
+    assert not group_active.all()
+
+
+def test_intercept_linear():
+    prob, g = make_problem(seed=5, intercept=True)
+    # shift y
+    prob = Problem(prob.X, prob.y + 7.0, "linear", True)
+    res = solve(prob, Penalty(g, 0.95), 0.05, max_iters=10000, tol=1e-7)
+    r = prob.y - prob.X @ res.beta - res.intercept
+    assert abs(float(jnp.mean(r))) < 1e-4      # residuals centered
+
+
+def test_warm_start_speeds_up():
+    prob, g = make_problem(seed=6)
+    pen = Penalty(g, 0.95)
+    r1 = solve(prob, pen, 0.05, max_iters=20000, tol=1e-6)
+    r2 = solve(prob, pen, 0.045, beta0=r1.beta, c0=r1.intercept,
+               max_iters=20000, tol=1e-6)
+    r2_cold = solve(prob, pen, 0.045, max_iters=20000, tol=1e-6)
+    assert int(r2.iters) <= int(r2_cold.iters) + 5
