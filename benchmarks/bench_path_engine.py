@@ -1,0 +1,109 @@
+"""Path-engine benchmark: engine vs the preserved seed driver -> BENCH_path.json.
+
+Machine-readable perf trajectory for the pathwise driver, tracked from the
+engine PR onward: jit-warm wall-clock per DFR path fit, screen/solve split,
+bucket widths compiled, and the betas deviation between the two drivers on
+the same problem.  Run from the repo root:
+
+    PYTHONPATH=src python -m benchmarks.bench_path_engine --scale smoke
+
+``--backends jnp pallas`` also times the kernel backend (interpret mode
+off-TPU, so expect it to be slower on CPU — the number is recorded for the
+trajectory, not as a win).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GroupInfo, Penalty, Problem, fit_path, standardize
+from repro.core.path_reference import fit_path_reference
+
+SCALES = {
+    "smoke": dict(n=200, p=2048, m=32, length=20),
+    "full": dict(n=400, p=8192, m=128, length=50),
+}
+DEFAULT_OUT = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_path.json"))
+
+
+def make_problem(n, p, m, seed=0):
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([p // m] * m)
+    X = standardize(rng.normal(size=(n, p)))
+    beta = np.zeros(p)
+    for gi in rng.choice(m, 4, replace=False):
+        s = gi * (p // m)
+        beta[s:s + 8] = rng.normal(0, 2, 8)
+    y = X @ beta + 0.4 * rng.normal(size=n)
+    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+                   "linear", True)
+    return prob, Penalty(g, 0.95)
+
+
+def _timed(fn, reps):
+    """Warm once, then best-of-reps (steady-state jit-warm timing)."""
+    fn()
+    best, best_t = None, float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = fn()
+        t = time.perf_counter() - t0
+        if t < best_t:
+            best, best_t = res, t
+    return best, best_t
+
+
+def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
+        backends=("jnp",)) -> dict:
+    spec = SCALES[scale]
+    prob, pen = make_problem(spec["n"], spec["p"], spec["m"])
+    length = spec["length"]
+
+    r_seed, t_seed = _timed(
+        lambda: fit_path_reference(prob, pen, screen="dfr", length=length,
+                                   term=0.1), reps)
+    result = {
+        "scale": scale, "n": spec["n"], "p": spec["p"], "m": spec["m"],
+        "length": length, "screen": "dfr",
+        "seed_driver": {"total_s": t_seed, "screen_s": r_seed.screen_time,
+                        "solve_s": r_seed.solve_time},
+    }
+    for backend in backends:
+        r_eng, t_eng = _timed(
+            lambda: fit_path(prob, pen, screen="dfr", length=length, term=0.1,
+                             backend=backend), reps)
+        result[f"engine_{backend}"] = {
+            "total_s": t_eng,
+            "screen_s": r_eng.screen_time,
+            "solve_s": r_eng.solve_time,
+            "buckets_compiled": list(r_eng.buckets),
+            "max_abs_dbeta_vs_seed": float(np.max(np.abs(r_eng.betas - r_seed.betas))),
+            "speedup_vs_seed": t_seed / t_eng,
+        }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print(f"[bench_path_engine] wrote {out}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="engine-vs-seed path benchmark")
+    ap.add_argument("--scale", default="smoke", choices=sorted(SCALES))
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--backends", nargs="+", default=["jnp"],
+                    choices=["jnp", "pallas"])
+    args = ap.parse_args(argv)
+    run(args.scale, args.out, args.reps, tuple(args.backends))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

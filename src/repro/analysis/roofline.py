@@ -27,6 +27,18 @@ import math
 
 from ..models.config import ModelConfig, SHAPES, ShapeCell
 
+def compiled_cost_analysis(compiled) -> dict:
+    """Version-proof ``compiled.cost_analysis()``.
+
+    Older JAX returned a per-device list of dicts, current JAX returns the
+    dict directly; normalize both to a plain dict (empty if unavailable).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
 HBM_BW = 819e9               # B/s / chip
 LINK_BW = 50e9               # B/s / link

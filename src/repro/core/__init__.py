@@ -1,12 +1,16 @@
 """The paper's contribution: DFR screening for SGL/aSGL, as composable JAX modules."""
 from .groups import GroupInfo, to_padded, from_padded, group_l2, group_linf, expand
 from .epsilon_norm import epsilon_norm, epsilon_norm_exact, epsilon_norm_bisect, epsilon_dual_norm
-from .penalties import (Penalty, sgl_norm, sgl_prox, sgl_dual_norm, sgl_tau, sgl_eps,
-                        asgl_norm, asgl_prox, asgl_gamma_eps, soft_threshold)
+from .penalties import (Penalty, restrict_penalty, sgl_norm, sgl_prox, sgl_dual_norm,
+                        sgl_tau, sgl_eps, asgl_norm, asgl_prox, asgl_gamma_eps,
+                        soft_threshold)
 from .losses import Problem, loss_value, gradient, residual, lipschitz, standardize
 from .solvers import solve, fista, atos, SolveResult
 from .screening import (dfr_screen, dfr_screen_asgl, sparsegl_screen,
                         gap_safe_screen, ScreenResult)
-from .kkt import kkt_violations
+from .kkt import kkt_violations, kkt_check, kkt_gradient
 from .adaptive import pca_weights, asgl_path_start
+from .engine import PathEngine, bucket_width
 from .path import fit_path, path_start, lambda_path, PathResult
+from .path_reference import fit_path_reference
+from .cv import cv_fit_path, CVResult

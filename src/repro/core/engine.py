@@ -1,0 +1,184 @@
+"""Device-resident bucketed path engine.
+
+The seed driver rebuilt a padded O(n*p) copy of ``X`` at every KKT round of
+every path point, round-tripped masks and betas through host numpy, dropped
+the warm-startable step size ``SolveResult.step``, and never touched the
+Pallas kernels from the screening hot path.  This module replaces all of
+that with three module-level jitted steps whose compile caches are shared
+across fits (CV folds, (lambda, alpha) grids — anything with equal shapes):
+
+* :func:`screen_step`     — gradient-based screening rule + union with the
+                            active set, one jit per (mode, method, backend).
+* :func:`fused_path_step` — gather the restricted matrix on-device from a
+                            padded index vector (``jnp.nonzero(mask,
+                            size=width)``), solve the restricted problem
+                            warm-started on (beta, intercept, step), scatter
+                            back, evaluate the full gradient and the KKT
+                            violations — one jit per (bucket width, solver,
+                            mode flags).
+* :func:`null_path_step`  — the empty-optimization-set fast path.
+
+The zero-column-extended design ``Xp = [X | 0]`` is built ONCE per
+:class:`PathEngine`; restricted matrices are pure on-device gathers from it.
+Per path point only the bucket-width decision (an int) syncs to host, plus
+one violation count per KKT round.
+
+Bucketed restricted-problem layout
+----------------------------------
+``jnp.nonzero`` returns ascending indices and groups are contiguous index
+ranges, so the gathered restricted vector keeps groups contiguous: group g
+occupies slots ``[starts_sub[g], starts_sub[g] + sizes_sub[g])`` with all
+padding at the tail.  :func:`~repro.core.penalties.restrict_penalty` builds
+the matching restricted Penalty (layout sizes for the padded [m, d] view the
+kernels consume, full-group sqrt(p_g) weights carried via ``w``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kkt import kkt_check, kkt_gradient
+from .losses import Problem
+from .penalties import Penalty, restrict_penalty
+from .screening import (dfr_screen, dfr_screen_asgl, gap_safe_screen,
+                        sparsegl_screen)
+from .solvers import solve
+
+
+def bucket_width(nsel: int, p: int, minimum: int = 8) -> int:
+    """Smallest power-of-two bucket (>= minimum) holding ``nsel`` columns."""
+    b = minimum
+    while b < nsel:
+        b *= 2
+    return min(b, p)
+
+
+def extend_design(X) -> jnp.ndarray:
+    """``[X | 0]``: the zero-column-extended design every padding slot of a
+    gather points at.  Depends only on X — precompute and pass to
+    :class:`PathEngine`/``fit_path`` to share across fits of the same
+    problem (CV folds x alpha grids)."""
+    return jnp.concatenate([X, jnp.zeros((X.shape[0], 1), X.dtype)], axis=1)
+
+
+@partial(jax.jit, static_argnames=("mode", "method", "backend"))
+def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
+                *, mode: str, method: str, backend: str):
+    """One fused screening pass -> (keep_groups, keep_vars, opt_mask)."""
+    if mode == "dfr":
+        if penalty.adaptive:
+            cand = dfr_screen_asgl(grad, beta, penalty, lam_k, lam_next,
+                                   method, backend=backend)
+        else:
+            cand = dfr_screen(grad, penalty, lam_k, lam_next, method,
+                              backend=backend)
+    elif mode == "sparsegl":
+        cand = sparsegl_screen(grad, penalty, lam_k, lam_next, backend=backend)
+    elif mode in ("gap", "gap_dynamic"):
+        cand = gap_safe_screen(prob.X, prob.y, beta, penalty, lam_next, method)
+    else:
+        raise ValueError(f"unknown screen mode {mode!r}")
+    mask = cand.keep_vars | (beta != 0)
+    return cand.keep_groups, cand.keep_vars, mask
+
+
+@partial(jax.jit, static_argnames=("width", "solver", "max_iters", "check_kkt",
+                                   "backend"))
+def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
+                    step0, tol, *, width: int, solver: str, max_iters: int,
+                    check_kkt: bool, backend: str):
+    """gather -> restricted solve -> scatter -> full gradient -> KKT audit."""
+    p = prob.p
+    idx_pad = jnp.nonzero(mask, size=width, fill_value=p)[0]
+    Xs = Xp[:, idx_pad]                                   # O(n*width) gather
+    pen_sub = restrict_penalty(penalty, mask, idx_pad, width)
+    prob_sub = Problem(Xs, prob.y, prob.loss, prob.intercept)
+    b0 = jnp.concatenate([beta, jnp.zeros((1,), beta.dtype)])[idx_pad]
+    res = solve(prob_sub, pen_sub, lam, beta0=b0, c0=c, solver=solver,
+                backend=backend, max_iters=max_iters, tol=tol, step0=step0)
+    beta_full = jnp.zeros((p + 1,), beta.dtype).at[idx_pad].set(res.beta)[:p]
+    grad, viols = kkt_check(prob, penalty, beta_full, res.intercept, lam, mask,
+                            check=check_kkt, backend=backend)
+    return (beta_full, res.intercept, grad, viols, jnp.sum(viols),
+            res.iters, res.converged, res.step)
+
+
+@partial(jax.jit, static_argnames=("check_kkt", "backend"))
+def null_path_step(prob: Problem, penalty: Penalty, c, lam, mask, *,
+                   check_kkt: bool, backend: str):
+    """Empty optimization set: beta = 0, still audit the KKT conditions."""
+    beta = jnp.zeros((prob.p,), prob.X.dtype)
+    grad, viols = kkt_check(prob, penalty, beta, c, lam, mask,
+                            check=check_kkt, backend=backend)
+    return beta, grad, viols, jnp.sum(viols)
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def gradient_step(prob: Problem, beta, c, *, backend: str):
+    return kkt_gradient(prob, beta, c, backend=backend)
+
+
+class PathEngine:
+    """Per-fit state (cached extended design, warm-started step size) over the
+    module-level jitted steps.  Creating many engines with equal problem
+    shapes reuses the same compiled code."""
+
+    def __init__(self, prob: Problem, penalty: Penalty, *, solver: str = "fista",
+                 max_iters: int = 5000, tol: float = 1e-5,
+                 eps_method: str = "exact", backend: str = "jnp",
+                 bucket_min: int = 8, Xp=None):
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.prob = prob
+        self.penalty = penalty
+        self.solver = solver
+        self.max_iters = max_iters
+        self.tol = float(tol)
+        self.eps_method = eps_method
+        self.backend = backend
+        self.bucket_min = bucket_min
+        dt = prob.X.dtype
+        # the ONE padded copy of X for the whole fit (or a shared one the
+        # caller precomputed with extend_design)
+        if Xp is None:
+            Xp = extend_design(prob.X)
+        elif Xp.shape != (prob.n, prob.p + 1):
+            # a bare X here would make the padding slots gather the LAST
+            # real column (JAX clamps out-of-range indices) — silently wrong
+            raise ValueError(f"Xp must be extend_design(X) with shape "
+                             f"{(prob.n, prob.p + 1)}, got {Xp.shape}")
+        self.Xp = Xp
+        self.step_size = jnp.asarray(1.0, dt)   # warm start across path points
+        # within a solve the backtracking step is monotone non-increasing and
+        # rounding noise near convergence can over-shrink it; re-growing by
+        # bt^-4 at each solve entry (capped at the cold-start 1.0) lets the
+        # carried step track the restricted problem's curvature both ways
+        self.step_regrow = 0.7 ** -4
+        self.widths: set = set()
+
+    def gradient(self, beta, c):
+        return gradient_step(self.prob, beta, c, backend=self.backend)
+
+    def screen(self, grad, beta, lam_k, lam_next, mode: str):
+        return screen_step(self.prob, self.penalty, grad, beta, lam_k, lam_next,
+                           mode=mode, method=self.eps_method,
+                           backend=self.backend)
+
+    def step(self, mask, count: int, beta, c, lam, *, check_kkt: bool = True,
+             max_iters: int = None):
+        width = bucket_width(count, self.prob.p, self.bucket_min)
+        self.widths.add(width)
+        step0 = jnp.minimum(self.step_size * self.step_regrow, 1.0)
+        out = fused_path_step(
+            self.prob, self.Xp, self.penalty, mask, beta, c, lam,
+            step0, self.tol, width=width, solver=self.solver,
+            max_iters=self.max_iters if max_iters is None else max_iters,
+            check_kkt=check_kkt, backend=self.backend)
+        self.step_size = out[-1]
+        return out
+
+    def null_step(self, c, lam, mask, check_kkt: bool = True):
+        return null_path_step(self.prob, self.penalty, c, lam, mask,
+                              check_kkt=check_kkt, backend=self.backend)

@@ -15,7 +15,31 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .groups import expand
+from .losses import Problem, gradient, residual
 from .penalties import Penalty, soft_threshold
+
+
+def kkt_gradient(prob: Problem, beta, c, backend: str = "jnp") -> jnp.ndarray:
+    """Full-space grad f at (beta, c); ``backend="pallas"`` routes the
+    O(n*p) matvec through the blocked ``kernels.ops.screen_gradient``."""
+    if backend == "pallas":
+        from ..kernels.ops import screen_gradient
+        return screen_gradient(prob.X, residual(prob, beta, c))
+    return gradient(prob, beta, c)
+
+
+def kkt_check(prob: Problem, penalty: Penalty, beta, c, lam, opt_mask, *,
+              check: bool = True, backend: str = "jnp"):
+    """Fused gradient + violation audit -> (grad [p], viols [p] bool).
+
+    ``check=False`` (no-screen / exact GAP-safe modes, where violations are
+    impossible) still returns the gradient — it is the next path point's
+    screening input.
+    """
+    grad = kkt_gradient(prob, beta, c, backend=backend)
+    if not check:
+        return grad, jnp.zeros((prob.p,), bool)
+    return grad, kkt_violations(grad, penalty, lam, opt_mask)
 
 
 def kkt_violations(grad: jnp.ndarray, penalty: Penalty, lam,

@@ -52,26 +52,36 @@ def predict(prob: Problem, beta, c=0.0):
     return prob.X @ beta + c
 
 
-def loss_value(prob: Problem, beta, c=0.0):
-    eta = predict(prob, beta, c)
+def loss_value_from_eta(prob: Problem, eta, c=0.0):
+    """Loss from a precomputed ``eta = X beta`` (solver hot path: the one
+    matvec feeds loss, residual and the intercept update)."""
     n = prob.X.shape[0]
     if prob.loss == "linear":
-        r = prob.y - eta
+        r = prob.y - eta - c
         return 0.5 * jnp.dot(r, r) / n
     if prob.loss == "logistic":
         # log(1 + e^eta) - y*eta, numerically stable via logaddexp
-        return jnp.mean(jnp.logaddexp(0.0, eta) - prob.y * eta)
+        lin = eta + c
+        return jnp.mean(jnp.logaddexp(0.0, lin) - prob.y * lin)
+    raise ValueError(prob.loss)
+
+
+def loss_value(prob: Problem, beta, c=0.0):
+    return loss_value_from_eta(prob, prob.X @ beta, c)
+
+
+def residual_from_eta(prob: Problem, eta, c=0.0):
+    """Working residual from a precomputed ``eta = X beta``."""
+    if prob.loss == "linear":
+        return prob.y - eta - c
+    if prob.loss == "logistic":
+        return prob.y - jax.nn.sigmoid(eta + c)
     raise ValueError(prob.loss)
 
 
 def residual(prob: Problem, beta, c=0.0):
     """The 'working residual' r with grad f = -X^T r / n."""
-    eta = predict(prob, beta, c)
-    if prob.loss == "linear":
-        return prob.y - eta
-    if prob.loss == "logistic":
-        return prob.y - jax.nn.sigmoid(eta)
-    raise ValueError(prob.loss)
+    return residual_from_eta(prob, prob.X @ beta, c)
 
 
 def gradient(prob: Problem, beta, c=0.0):

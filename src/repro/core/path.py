@@ -1,12 +1,14 @@
 """Pathwise driver: Algorithm 1 (DFR) plus no-screen / sparsegl / GAP-safe modes.
 
 The driver runs the lambda path in Python (per-point optimization-set shapes
-differ) and jits the inner solves.  The optimization set ``O_v`` is realized
-as a **gather -> dense (n x |O_v|_pad) solve -> scatter**: screened column
-indices are compacted into a matrix whose width is bucketed to powers of two,
-so XLA compiles only O(log p) solver variants across the whole path.  This
-compaction is the actual source of the paper's speedup and maps directly onto
-the MXU at TPU scale (see distributed/dist_sgl.py for the sharded version).
+differ) and delegates every hot step to the device-resident
+:class:`~repro.core.engine.PathEngine`: the zero-column-extended design matrix
+is built ONCE per fit, restricted matrices are gathered on-device from a
+padded index vector whose width is bucketed to powers of two (so XLA compiles
+only O(log p) solver variants across the whole path), and screening, the
+restricted solve, and the KKT-violation audit run as a single fused jitted
+step per (mode, bucket).  Host syncs per path point: the bucket-width
+decision (one int) plus one violation count per KKT round.
 
 Modes:
   * ``screen="dfr"``      — the paper: bi-level strong rule + KKT loop
@@ -14,6 +16,13 @@ Modes:
   * ``screen="gap"``      — sequential GAP-safe (exact; no KKT loop needed)
   * ``screen="gap_dynamic"`` — GAP-safe re-applied during the solve
   * ``screen=None``       — no screening (baseline)
+
+``backend="pallas"`` routes the gradient, the group screening statistics and
+the solver prox through the Pallas kernels (``kernels/ops.py``); off-TPU the
+kernels run in interpret mode, so results are identical either way.
+
+The seed (pre-engine) driver is preserved verbatim in ``path_reference.py``
+as the equivalence/benchmark baseline.
 """
 from __future__ import annotations
 
@@ -26,13 +35,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from .adaptive import asgl_path_start
+from .engine import PathEngine
 from .groups import GroupInfo
-from .kkt import kkt_violations
 from .losses import Problem, gradient, residual
 from .penalties import Penalty, sgl_dual_norm
-from .screening import (ScreenResult, dfr_screen, dfr_screen_asgl,
-                        gap_safe_screen, sparsegl_screen)
-from .solvers import solve
+from .screening import ScreenResult
 
 
 # ---------------------------------------------------------------------------
@@ -70,38 +77,6 @@ def lambda_path(lam1, length: int = 50, term: float = 0.1) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# bucketed restricted solve
-# ---------------------------------------------------------------------------
-
-def _bucket(nsel: int, p: int, minimum: int = 8) -> int:
-    b = minimum
-    while b < nsel:
-        b *= 2
-    return min(b, p)
-
-
-def _restricted(prob: Problem, penalty: Penalty, idx: np.ndarray, width: int):
-    """Gather columns ``idx`` (padded to ``width`` with zero columns)."""
-    pad = width - len(idx)
-    idx_pad = np.concatenate([idx, np.full((pad,), prob.p, dtype=np.int64)])
-    Xp = jnp.concatenate([prob.X, jnp.zeros((prob.n, 1), prob.X.dtype)], axis=1)
-    Xs = Xp[:, idx_pad]
-    g = penalty.g
-    gid = np.asarray(g.group_id)
-    gid_pad = np.concatenate([gid[idx], np.zeros((pad,), gid.dtype)])
-    g_sub = GroupInfo(group_id=jnp.asarray(gid_pad), sizes=g.sizes,
-                      starts=g.starts, p=width, m=g.m, max_size=g.max_size)
-    if penalty.adaptive:
-        v = np.asarray(penalty.v)
-        v_pad = jnp.asarray(np.concatenate([v[idx], np.zeros((pad,), v.dtype)]))
-        pen_sub = Penalty(g_sub, penalty.alpha, v_pad, penalty.w)
-    else:
-        pen_sub = Penalty(g_sub, penalty.alpha)
-    prob_sub = Problem(Xs, prob.y, prob.loss, prob.intercept)
-    return prob_sub, pen_sub, idx_pad
-
-
-# ---------------------------------------------------------------------------
 # results container
 # ---------------------------------------------------------------------------
 
@@ -113,6 +88,7 @@ class PathResult:
     metrics: dict                    # lists of per-point stats
     screen_time: float
     solve_time: float
+    buckets: tuple = ()              # solver bucket widths compiled for this fit
 
     @property
     def total_time(self):
@@ -151,125 +127,112 @@ def _record(metrics, g: GroupInfo, beta, cand: Optional[ScreenResult], opt_mask,
 # the driver
 # ---------------------------------------------------------------------------
 
+_SCREEN_MODES = (None, "dfr", "sparsegl", "gap", "gap_dynamic")
+
+
 def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *, screen="dfr",
              solver: str = "fista", length: int = 50, term: float = 0.1,
              max_iters: int = 5000, tol: float = 1e-5, kkt_max_rounds: int = 20,
              eps_method: str = "exact", dynamic_every: int = 25,
-             verbose: bool = False) -> PathResult:
-    if lambdas is None:
+             verbose: bool = False, backend: str = "jnp", Xp=None) -> PathResult:
+    if screen not in _SCREEN_MODES:
+        raise ValueError(f"unknown screen mode {screen!r}")
+    if screen in ("gap", "gap_dynamic") and (prob.loss != "linear" or penalty.adaptive):
+        raise ValueError("GAP-safe implemented for linear SGL only")
+    user_grid = lambdas is not None
+    if not user_grid:
         lam1 = float(path_start(prob, penalty, method=eps_method))
         lambdas = lambda_path(lam1, length, term)
     lambdas = np.asarray(lambdas, dtype=np.float64)
     l = len(lambdas)
-    p, m = prob.p, penalty.g.m
+    p = prob.p
 
-    betas = np.zeros((l, p), dtype=np.asarray(prob.X).dtype)
-    intercepts = np.zeros((l,), dtype=np.asarray(prob.X).dtype)
+    engine = PathEngine(prob, penalty, solver=solver, max_iters=max_iters,
+                        tol=tol, eps_method=eps_method, backend=backend, Xp=Xp)
+
+    betas = np.zeros((l, p), dtype=prob.X.dtype)
+    intercepts = np.zeros((l,), dtype=prob.X.dtype)
     metrics = _metrics_init()
     t_screen = 0.0
     t_solve = 0.0
 
     beta = jnp.zeros((p,), prob.X.dtype)
     c = null_intercept(prob)
-    grad = gradient(prob, beta, c)
+    grad = engine.gradient(beta, c)
+    full_mask = jnp.ones((p,), bool)
+    check_kkt = screen not in (None, "gap")   # exact / full: no violations possible
 
-    # first path point: the null model by construction of lambda_1
-    betas[0] = 0.0
-    intercepts[0] = float(c)
-    _record(metrics, penalty.g, betas[0], None, np.zeros((p,), bool), 0, 0, True)
+    if user_grid:
+        # lambdas[0] need not be this problem's lambda_1 (e.g. a CV fold
+        # refitting the full-data grid) — solve the head of the path too,
+        # with the strong rule anchored at lambdas[0] itself
+        k0 = 0
+    else:
+        # first path point: the null model by construction of lambda_1
+        k0 = 1
+        betas[0] = 0.0
+        intercepts[0] = float(c)
+        _record(metrics, penalty.g, betas[0], None, np.zeros((p,), bool), 0, 0, True)
 
-    for k in range(1, l):
-        lam_k, lam = lambdas[k - 1], lambdas[k]
+    for k in range(k0, l):
+        lam_k, lam = lambdas[max(k - 1, 0)], lambdas[k]
 
         # ---- screening --------------------------------------------------
         t0 = time.perf_counter()
-        cand: Optional[ScreenResult] = None
-        if screen == "dfr":
-            if penalty.adaptive:
-                cand = dfr_screen_asgl(grad, beta, penalty, lam_k, lam, eps_method)
-            else:
-                cand = dfr_screen(grad, penalty, lam_k, lam, eps_method)
-        elif screen == "sparsegl":
-            cand = sparsegl_screen(grad, penalty, lam_k, lam)
-        elif screen in ("gap", "gap_dynamic"):
-            if prob.loss != "linear" or penalty.adaptive:
-                raise ValueError("GAP-safe implemented for linear SGL only")
-            cand = gap_safe_screen(prob.X, prob.y, beta, penalty, lam, eps_method)
-        elif screen is not None:
-            raise ValueError(f"unknown screen mode {screen!r}")
-
-        active_prev = np.asarray(jnp.abs(beta) > 0)
-        if cand is not None:
-            opt_mask = np.asarray(cand.keep_vars) | active_prev
+        cand = None
+        if screen is None:
+            mask, count = full_mask, p
         else:
-            opt_mask = np.ones((p,), bool)
-        jax.block_until_ready(beta)
+            keep_g, keep_v, mask = engine.screen(grad, beta, lam_k, lam, screen)
+            cand = ScreenResult(keep_g, keep_v)
+            count = int(jnp.sum(mask))        # the one bucket-decision sync
         t_screen += time.perf_counter() - t0
 
-        # ---- solve + KKT loop -------------------------------------------
+        # ---- fused solve + KKT loop -------------------------------------
         t0 = time.perf_counter()
         total_viols = 0
         rounds = 0
         while True:
-            idx = np.where(opt_mask)[0]
-            if len(idx) == 0:
-                beta = jnp.zeros((p,), prob.X.dtype)
+            if count == 0:
+                beta, grad, viols, nv = engine.null_step(c, lam, mask, check_kkt)
                 res_iters, res_conv = 0, True
             else:
-                width = _bucket(len(idx), p)
-                prob_s, pen_s, idx_pad = _restricted(prob, penalty, idx, width)
-                b0 = jnp.concatenate([beta, jnp.zeros((1,), beta.dtype)])[idx_pad]
-                res = solve(prob_s, pen_s, lam, beta0=b0, c0=c, solver=solver,
-                            max_iters=max_iters, tol=tol)
-                full = np.zeros((p + 1,), np.asarray(prob.X).dtype)
-                full[np.asarray(idx_pad)] = np.asarray(res.beta)
-                beta = jnp.asarray(full[:p])
-                c = res.intercept
-                res_iters, res_conv = int(res.iters), bool(res.converged)
-
-            grad = gradient(prob, beta, c)
-            if screen in (None, "gap"):
-                viols = jnp.zeros((p,), bool)   # exact / full: no violations possible
-            else:
-                viols = kkt_violations(grad, penalty, lam, jnp.asarray(opt_mask))
-            nv = int(jnp.sum(viols))
+                (beta, c, grad, viols, nv, res_iters,
+                 res_conv, _) = engine.step(mask, count, beta, c, lam,
+                                            check_kkt=check_kkt)
+            nv = int(nv)                      # one sync per KKT round
             total_viols += nv
             rounds += 1
             if nv == 0 or rounds >= kkt_max_rounds:
                 break
-            opt_mask = opt_mask | np.asarray(viols)
+            mask = mask | viols               # violators re-enter O_v
+            count += nv
 
         # dynamic GAP-safe: re-screen with the *current* primal point and
         # re-solve on the (only ever shrinking) safe set
         if screen == "gap_dynamic":
             for _ in range(3):
-                cand2 = gap_safe_screen(prob.X, prob.y, beta, penalty, lam, eps_method)
-                new_mask = (np.asarray(cand2.keep_vars) & opt_mask) | (np.asarray(jnp.abs(beta) > 0))
-                if new_mask.sum() >= opt_mask.sum():
+                _, keep_v2, _ = engine.screen(grad, beta, lam, lam, "gap")
+                new_mask = (keep_v2 & mask) | (beta != 0)
+                new_count = int(jnp.sum(new_mask))
+                if new_count >= count:
                     break
-                opt_mask = new_mask
-                idx = np.where(opt_mask)[0]
-                width = _bucket(max(len(idx), 1), p)
-                prob_s, pen_s, idx_pad = _restricted(prob, penalty, idx, width)
-                b0 = jnp.concatenate([beta, jnp.zeros((1,), beta.dtype)])[idx_pad]
-                res = solve(prob_s, pen_s, lam, beta0=b0, c0=c, solver=solver,
-                            max_iters=dynamic_every, tol=tol)
-                full = np.zeros((p + 1,), np.asarray(prob.X).dtype)
-                full[np.asarray(idx_pad)] = np.asarray(res.beta)
-                beta = jnp.asarray(full[:p])
-                c = res.intercept
+                mask, count = new_mask, new_count
+                (beta, c, grad, viols, nv, res_iters,
+                 res_conv, _) = engine.step(mask, max(count, 1), beta, c, lam,
+                                            check_kkt=False,
+                                            max_iters=dynamic_every)
 
         jax.block_until_ready(beta)
         t_solve += time.perf_counter() - t0
 
         betas[k] = np.asarray(beta)
         intercepts[k] = float(c)
-        _record(metrics, penalty.g, betas[k], cand, opt_mask, total_viols,
+        _record(metrics, penalty.g, betas[k], cand, np.asarray(mask), total_viols,
                 res_iters, res_conv)
         if verbose:
-            print(f"[path {k:3d}/{l}] lam={lam:.4g} |O_v|={int(opt_mask.sum())} "
-                  f"iters={res_iters} viols={total_viols}")
+            print(f"[path {k:3d}/{l}] lam={lam:.4g} |O_v|={count} "
+                  f"iters={int(res_iters)} viols={total_viols}")
 
-        grad = gradient(prob, beta, c)   # for the next screen
-
-    return PathResult(lambdas, betas, intercepts, metrics, t_screen, t_solve)
+    return PathResult(lambdas, betas, intercepts, metrics, t_screen, t_solve,
+                      buckets=tuple(sorted(engine.widths)))

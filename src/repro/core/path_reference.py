@@ -1,0 +1,268 @@
+"""The seed (pre-engine) pathwise driver, preserved verbatim.
+
+This is the reference implementation the device-resident engine in
+``engine.py``/``path.py`` is validated against (tests/test_path_engine.py)
+and benchmarked against (benchmarks/bench_path_engine.py).  It rebuilds the
+padded design matrix at every KKT round and round-trips masks/betas through
+host numpy — exactly the overheads the engine removes — so keep it as-is.
+The seed FISTA (which rederives X @ z three times per iteration where the
+current solver carries eta through the momentum update) is pinned below for
+the same reason: the benchmark baseline is the code as of the seed commit,
+driver and solver together.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .groups import GroupInfo
+from .kkt import kkt_violations
+from .losses import Problem, gradient, loss_value, residual
+from .penalties import Penalty
+from .path import (PathResult, _metrics_init, _record, lambda_path,
+                   null_intercept, path_start)
+from .screening import (ScreenResult, dfr_screen, dfr_screen_asgl,
+                        gap_safe_screen, sparsegl_screen)
+from .solvers import SolveResult, atos
+
+
+# ---------------------------------------------------------------------------
+# the seed solver, pinned
+# ---------------------------------------------------------------------------
+
+def _grad_and_loss_seed(prob: Problem, beta, c):
+    r = residual(prob, beta, c)
+    g = -(prob.X.T @ r) / prob.X.shape[0]
+    f = loss_value(prob, beta, c)
+    return g, f
+
+
+def _update_intercept_seed(prob: Problem, beta, c):
+    if not prob.intercept:
+        return c
+    eta = prob.X @ beta
+    if prob.loss == "linear":
+        return jnp.mean(prob.y - eta)
+    def body(_, c):
+        p_hat = jax.nn.sigmoid(eta + c)
+        g = jnp.mean(p_hat - prob.y)
+        h = jnp.maximum(jnp.mean(p_hat * (1 - p_hat)), 1e-6)
+        return c - g / h
+    return jax.lax.fori_loop(0, 4, body, c)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "max_bt"))
+def _fista_seed(prob: Problem, penalty: Penalty, lam, beta0, c0=0.0, step0=1.0,
+                max_iters: int = 5000, tol: float = 1e-5, bt: float = 0.7,
+                max_bt: int = 100) -> SolveResult:
+    lam = jnp.asarray(lam, beta0.dtype)
+
+    class S(NamedTuple):
+        beta: jnp.ndarray
+        z: jnp.ndarray
+        t: jnp.ndarray
+        c: jnp.ndarray
+        step: jnp.ndarray
+        it: jnp.ndarray
+        delta: jnp.ndarray
+
+    def cond(s: S):
+        return (s.it < max_iters) & (s.delta > tol)
+
+    def body(s: S):
+        c = _update_intercept_seed(prob, s.z, s.c)
+        g, f = _grad_and_loss_seed(prob, s.z, c)
+
+        def bt_cond(carry):
+            step, it = carry
+            b_new = penalty.prox(s.z - step * g, step * lam)
+            d = b_new - s.z
+            f_new = loss_value(prob, b_new, c)
+            ub = f + jnp.dot(g, d) + 0.5 * jnp.dot(d, d) / step
+            slack = 1e-6 * jnp.abs(f) + 1e-10
+            return (f_new > ub + slack) & (it < max_bt)
+
+        step, _ = jax.lax.while_loop(bt_cond, lambda cr: (cr[0] * bt, cr[1] + 1),
+                                     (s.step, jnp.array(0)))
+        beta_new = penalty.prox(s.z - step * g, step * lam)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t**2))
+        z_new = beta_new + ((s.t - 1.0) / t_new) * (beta_new - s.beta)
+        restart = jnp.dot(s.z - beta_new, beta_new - s.beta) > 0
+        z_new = jnp.where(restart, beta_new, z_new)
+        t_new = jnp.where(restart, 1.0, t_new)
+        denom = jnp.maximum(jnp.max(jnp.abs(beta_new)), 1.0)
+        delta = jnp.max(jnp.abs(beta_new - s.beta)) / denom
+        return S(beta_new, z_new, t_new, c, step, s.it + 1, delta)
+
+    s0 = S(beta0, beta0, jnp.array(1.0, beta0.dtype), jnp.asarray(c0, beta0.dtype),
+           jnp.asarray(step0, beta0.dtype), jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
+    s = jax.lax.while_loop(cond, body, s0)
+    return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step)
+
+
+_SEED_SOLVERS = {"fista": _fista_seed, "atos": atos}
+
+
+def solve(prob: Problem, penalty: Penalty, lam, beta0=None, c0=0.0,
+          solver: str = "fista", **kw) -> SolveResult:
+    if beta0 is None:
+        beta0 = jnp.zeros((prob.p,), prob.X.dtype)
+    return _SEED_SOLVERS[solver](prob, penalty, lam, beta0, c0, **kw)
+
+
+def _bucket(nsel: int, p: int, minimum: int = 8) -> int:
+    b = minimum
+    while b < nsel:
+        b *= 2
+    return min(b, p)
+
+
+def _restricted(prob: Problem, penalty: Penalty, idx: np.ndarray, width: int):
+    """Gather columns ``idx`` (padded to ``width`` with zero columns)."""
+    pad = width - len(idx)
+    idx_pad = np.concatenate([idx, np.full((pad,), prob.p, dtype=np.int64)])
+    Xp = jnp.concatenate([prob.X, jnp.zeros((prob.n, 1), prob.X.dtype)], axis=1)
+    Xs = Xp[:, idx_pad]
+    g = penalty.g
+    gid = np.asarray(g.group_id)
+    gid_pad = np.concatenate([gid[idx], np.zeros((pad,), gid.dtype)])
+    g_sub = GroupInfo(group_id=jnp.asarray(gid_pad), sizes=g.sizes,
+                      starts=g.starts, p=width, m=g.m, max_size=g.max_size)
+    if penalty.adaptive:
+        v = np.asarray(penalty.v)
+        v_pad = jnp.asarray(np.concatenate([v[idx], np.zeros((pad,), v.dtype)]))
+        pen_sub = Penalty(g_sub, penalty.alpha, v_pad, penalty.w)
+    else:
+        pen_sub = Penalty(g_sub, penalty.alpha)
+    prob_sub = Problem(Xs, prob.y, prob.loss, prob.intercept)
+    return prob_sub, pen_sub, idx_pad
+
+
+def fit_path_reference(prob: Problem, penalty: Penalty, lambdas=None, *,
+                       screen="dfr", solver: str = "fista", length: int = 50,
+                       term: float = 0.1, max_iters: int = 5000,
+                       tol: float = 1e-5, kkt_max_rounds: int = 20,
+                       eps_method: str = "exact", dynamic_every: int = 25,
+                       verbose: bool = False) -> PathResult:
+    if lambdas is None:
+        lam1 = float(path_start(prob, penalty, method=eps_method))
+        lambdas = lambda_path(lam1, length, term)
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+    l = len(lambdas)
+    p, m = prob.p, penalty.g.m
+
+    betas = np.zeros((l, p), dtype=np.asarray(prob.X).dtype)
+    intercepts = np.zeros((l,), dtype=np.asarray(prob.X).dtype)
+    metrics = _metrics_init()
+    t_screen = 0.0
+    t_solve = 0.0
+
+    beta = jnp.zeros((p,), prob.X.dtype)
+    c = null_intercept(prob)
+    grad = gradient(prob, beta, c)
+
+    # first path point: the null model by construction of lambda_1
+    betas[0] = 0.0
+    intercepts[0] = float(c)
+    _record(metrics, penalty.g, betas[0], None, np.zeros((p,), bool), 0, 0, True)
+
+    for k in range(1, l):
+        lam_k, lam = lambdas[k - 1], lambdas[k]
+
+        # ---- screening --------------------------------------------------
+        t0 = time.perf_counter()
+        cand: Optional[ScreenResult] = None
+        if screen == "dfr":
+            if penalty.adaptive:
+                cand = dfr_screen_asgl(grad, beta, penalty, lam_k, lam, eps_method)
+            else:
+                cand = dfr_screen(grad, penalty, lam_k, lam, eps_method)
+        elif screen == "sparsegl":
+            cand = sparsegl_screen(grad, penalty, lam_k, lam)
+        elif screen in ("gap", "gap_dynamic"):
+            if prob.loss != "linear" or penalty.adaptive:
+                raise ValueError("GAP-safe implemented for linear SGL only")
+            cand = gap_safe_screen(prob.X, prob.y, beta, penalty, lam, eps_method)
+        elif screen is not None:
+            raise ValueError(f"unknown screen mode {screen!r}")
+
+        active_prev = np.asarray(jnp.abs(beta) > 0)
+        if cand is not None:
+            opt_mask = np.asarray(cand.keep_vars) | active_prev
+        else:
+            opt_mask = np.ones((p,), bool)
+        jax.block_until_ready(beta)
+        t_screen += time.perf_counter() - t0
+
+        # ---- solve + KKT loop -------------------------------------------
+        t0 = time.perf_counter()
+        total_viols = 0
+        rounds = 0
+        while True:
+            idx = np.where(opt_mask)[0]
+            if len(idx) == 0:
+                beta = jnp.zeros((p,), prob.X.dtype)
+                res_iters, res_conv = 0, True
+            else:
+                width = _bucket(len(idx), p)
+                prob_s, pen_s, idx_pad = _restricted(prob, penalty, idx, width)
+                b0 = jnp.concatenate([beta, jnp.zeros((1,), beta.dtype)])[idx_pad]
+                res = solve(prob_s, pen_s, lam, beta0=b0, c0=c, solver=solver,
+                            max_iters=max_iters, tol=tol)
+                full = np.zeros((p + 1,), np.asarray(prob.X).dtype)
+                full[np.asarray(idx_pad)] = np.asarray(res.beta)
+                beta = jnp.asarray(full[:p])
+                c = res.intercept
+                res_iters, res_conv = int(res.iters), bool(res.converged)
+
+            grad = gradient(prob, beta, c)
+            if screen in (None, "gap"):
+                viols = jnp.zeros((p,), bool)   # exact / full: no violations possible
+            else:
+                viols = kkt_violations(grad, penalty, lam, jnp.asarray(opt_mask))
+            nv = int(jnp.sum(viols))
+            total_viols += nv
+            rounds += 1
+            if nv == 0 or rounds >= kkt_max_rounds:
+                break
+            opt_mask = opt_mask | np.asarray(viols)
+
+        # dynamic GAP-safe: re-screen with the *current* primal point and
+        # re-solve on the (only ever shrinking) safe set
+        if screen == "gap_dynamic":
+            for _ in range(3):
+                cand2 = gap_safe_screen(prob.X, prob.y, beta, penalty, lam, eps_method)
+                new_mask = (np.asarray(cand2.keep_vars) & opt_mask) | (np.asarray(jnp.abs(beta) > 0))
+                if new_mask.sum() >= opt_mask.sum():
+                    break
+                opt_mask = new_mask
+                idx = np.where(opt_mask)[0]
+                width = _bucket(max(len(idx), 1), p)
+                prob_s, pen_s, idx_pad = _restricted(prob, penalty, idx, width)
+                b0 = jnp.concatenate([beta, jnp.zeros((1,), beta.dtype)])[idx_pad]
+                res = solve(prob_s, pen_s, lam, beta0=b0, c0=c, solver=solver,
+                            max_iters=dynamic_every, tol=tol)
+                full = np.zeros((p + 1,), np.asarray(prob.X).dtype)
+                full[np.asarray(idx_pad)] = np.asarray(res.beta)
+                beta = jnp.asarray(full[:p])
+                c = res.intercept
+
+        jax.block_until_ready(beta)
+        t_solve += time.perf_counter() - t0
+
+        betas[k] = np.asarray(beta)
+        intercepts[k] = float(c)
+        _record(metrics, penalty.g, betas[k], cand, opt_mask, total_viols,
+                res_iters, res_conv)
+        if verbose:
+            print(f"[path {k:3d}/{l}] lam={lam:.4g} |O_v|={int(opt_mask.sum())} "
+                  f"iters={res_iters} viols={total_viols}")
+
+        grad = gradient(prob, beta, c)   # for the next screen
+
+    return PathResult(lambdas, betas, intercepts, metrics, t_screen, t_solve)

@@ -186,3 +186,40 @@ class Penalty:
         thr = t * (1.0 - self.alpha) * w * self.g.sqrt_sizes
         scale = jnp.where(norms > 0, jnp.maximum(0.0, 1.0 - thr / jnp.where(norms > 0, norms, 1.0)), 0.0)
         return expand(scale, self.g) * z
+
+
+# ---------------------------------------------------------------------------
+# restricted (bucketed-gather) penalties for the path engine
+# ---------------------------------------------------------------------------
+
+def restrict_penalty(penalty: Penalty, mask: jnp.ndarray, idx_pad: jnp.ndarray,
+                     width: int) -> Penalty:
+    """Penalty for the restricted problem gathered by ``idx_pad`` (jit-safe).
+
+    ``idx_pad`` is ascending (``jnp.nonzero`` order) and groups are
+    contiguous index ranges, so group g occupies the contiguous slots
+    ``[starts_sub[g], starts_sub[g] + sizes_sub[g])`` of the restricted
+    vector, with all padding (slots pointing at column p) at the tail.  The
+    returned GroupInfo carries this restricted layout — what the padded
+    [m, max_size] view used by the Pallas prox kernel needs — while the
+    group weight stays sqrt(p_g) of the FULL group (screened-out
+    coordinates are fixed at zero; they do not change the penalty weight):
+    it is carried through ``w`` so that w_sub * sqrt(sizes_sub) ==
+    w_full * sqrt(sizes_full) exactly on non-empty groups.
+    """
+    g = penalty.g
+    sizes_sub = segment_sum(mask.astype(jnp.int32), g)
+    starts_sub = (jnp.cumsum(sizes_sub) - sizes_sub).astype(jnp.int32)
+    gid_ext = jnp.concatenate([g.group_id, jnp.zeros((1,), g.group_id.dtype)])
+    g_sub = GroupInfo(group_id=gid_ext[idx_pad], sizes=sizes_sub,
+                      starts=starts_sub, p=width, m=g.m, max_size=g.max_size)
+    sqrt_full = g.sqrt_sizes
+    sqrt_sub = jnp.sqrt(jnp.maximum(sizes_sub, 1).astype(sqrt_full.dtype))
+    w_full = penalty.w if penalty.adaptive else jnp.ones((g.m,), sqrt_full.dtype)
+    w_sub = w_full * sqrt_full / sqrt_sub
+    if penalty.adaptive:
+        v_ext = jnp.concatenate([penalty.v, jnp.zeros((1,), penalty.v.dtype)])
+        v_sub = v_ext[idx_pad]
+    else:
+        v_sub = jnp.ones((width,), sqrt_full.dtype)
+    return Penalty(g_sub, penalty.alpha, v_sub, w_sub)

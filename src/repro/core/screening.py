@@ -40,16 +40,22 @@ class ScreenResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def dfr_screen(grad_k: jnp.ndarray, penalty: Penalty, lam_k, lam_next,
-               method: str = "exact") -> ScreenResult:
+               method: str = "exact", *, backend: str = "jnp") -> ScreenResult:
     """Bi-level strong screening for SGL/aSGL (paper Sec. 2.3 / 2.5).
 
     For aSGL the caller must pass ``beta_k`` via :func:`dfr_screen_asgl`.
+    ``backend="pallas"`` evaluates the group epsilon-norms with the fused
+    bisection kernel (interpret mode off-TPU).
     """
     if penalty.adaptive:
         raise ValueError("use dfr_screen_asgl for adaptive penalties")
     g, alpha = penalty.g, penalty.alpha
     thresh = 2.0 * lam_next - lam_k
-    en = sgl_group_epsilon_norms(grad_k, g, alpha, method=method)     # [m]
+    if backend == "pallas":
+        from ..kernels.ops import sgl_screen_norms
+        en = sgl_screen_norms(grad_k, g, alpha)                       # [m]
+    else:
+        en = sgl_group_epsilon_norms(grad_k, g, alpha, method=method)  # [m]
     keep_groups = en > sgl_tau(g, alpha) * thresh                     # Eq. 5
     keep_vars = jnp.abs(grad_k) > alpha * thresh                      # Eq. 6
     keep_vars = keep_vars & expand(keep_groups, g)
@@ -60,12 +66,19 @@ def dfr_screen(grad_k: jnp.ndarray, penalty: Penalty, lam_k, lam_next,
 
 
 def dfr_screen_asgl(grad_k: jnp.ndarray, beta_k: jnp.ndarray, penalty: Penalty,
-                    lam_k, lam_next, method: str = "exact") -> ScreenResult:
+                    lam_k, lam_next, method: str = "exact", *,
+                    backend: str = "jnp") -> ScreenResult:
     """DFR for aSGL (Eqs. 7/8) with (gamma_g, eps'_g) at beta_hat(lambda_k)."""
     g, alpha, v, w = penalty.g, penalty.alpha, penalty.v, penalty.w
     thresh = 2.0 * lam_next - lam_k
-    en, gamma, _ = asgl_group_epsilon_norms(grad_k, beta_k, g, alpha, v, w,
-                                            method=method)
+    if backend == "pallas":
+        from ..kernels.ops import group_epsilon_norms
+        from .penalties import asgl_gamma_eps
+        gamma, eps = asgl_gamma_eps(beta_k, g, alpha, v, w)
+        en = group_epsilon_norms(grad_k, g, eps)
+    else:
+        en, gamma, _ = asgl_group_epsilon_norms(grad_k, beta_k, g, alpha, v, w,
+                                                method=method)
     keep_groups = en > gamma * thresh                                 # Eq. 7
     keep_vars = jnp.abs(grad_k) > alpha * v * thresh                  # Eq. 8
     keep_vars = keep_vars & expand(keep_groups, g)
@@ -75,22 +88,29 @@ def dfr_screen_asgl(grad_k: jnp.ndarray, beta_k: jnp.ndarray, penalty: Penalty,
 
 
 def screen(grad_k, beta_k, penalty: Penalty, lam_k, lam_next,
-           method: str = "exact") -> ScreenResult:
+           method: str = "exact", *, backend: str = "jnp") -> ScreenResult:
     """Dispatch on penalty adaptivity."""
     if penalty.adaptive:
-        return dfr_screen_asgl(grad_k, beta_k, penalty, lam_k, lam_next, method)
-    return dfr_screen(grad_k, penalty, lam_k, lam_next, method)
+        return dfr_screen_asgl(grad_k, beta_k, penalty, lam_k, lam_next, method,
+                               backend=backend)
+    return dfr_screen(grad_k, penalty, lam_k, lam_next, method, backend=backend)
 
 
 # ---------------------------------------------------------------------------
 # sparsegl — group-only strong rule (comparison baseline)
 # ---------------------------------------------------------------------------
 
-def sparsegl_screen(grad_k: jnp.ndarray, penalty: Penalty, lam_k, lam_next) -> ScreenResult:
+def sparsegl_screen(grad_k: jnp.ndarray, penalty: Penalty, lam_k, lam_next, *,
+                    backend: str = "jnp") -> ScreenResult:
     g, alpha = penalty.g, penalty.alpha
     w = penalty.w if penalty.adaptive else jnp.ones((g.m,), grad_k.dtype)
-    st = soft_threshold(grad_k, lam_next * alpha)
-    lhs = group_l2(st, g)
+    if backend == "pallas":
+        from ..kernels.ops import group_screen_stats
+        thr = jnp.full((g.m,), lam_next * alpha, jnp.float32)
+        _, _, _, lhs = group_screen_stats(grad_k, g, thr)
+    else:
+        st = soft_threshold(grad_k, lam_next * alpha)
+        lhs = group_l2(st, g)
     rhs = w * g.sqrt_sizes * (1.0 - alpha) * (2.0 * lam_next - lam_k)
     keep_groups = lhs > rhs
     keep_vars = expand(keep_groups, g)     # whole surviving groups enter

@@ -24,7 +24,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .losses import Problem, loss_value, residual
+from .losses import (Problem, loss_value, loss_value_from_eta,
+                     residual_from_eta)
 from .penalties import Penalty
 
 
@@ -36,17 +37,10 @@ class SolveResult(NamedTuple):
     step: jnp.ndarray          # final step size (warm-startable)
 
 
-def _grad_and_loss(prob: Problem, beta, c):
-    r = residual(prob, beta, c)
-    g = -(prob.X.T @ r) / prob.X.shape[0]
-    f = loss_value(prob, beta, c)
-    return g, f
-
-
-def _update_intercept(prob: Problem, beta, c):
+def _intercept_from_eta(prob: Problem, eta, c):
+    """Exact (linear) / Newton (logistic) intercept update from ``eta = X b``."""
     if not prob.intercept:
         return c
-    eta = prob.X @ beta
     if prob.loss == "linear":
         return jnp.mean(prob.y - eta)
     # logistic: a few Newton steps on the (1-d, convex) intercept problem
@@ -58,58 +52,96 @@ def _update_intercept(prob: Problem, beta, c):
     return jax.lax.fori_loop(0, 4, body, c)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "max_bt"))
+
+
+@partial(jax.jit, static_argnames=("max_iters", "max_bt", "backend"))
 def fista(prob: Problem, penalty: Penalty, lam, beta0, c0=0.0, step0=1.0,
           max_iters: int = 5000, tol: float = 1e-5, bt: float = 0.7,
-          max_bt: int = 100) -> SolveResult:
-    """FISTA with backtracking and adaptive restart (O'Donoghue–Candès)."""
+          max_bt: int = 100, backend: str = "jnp") -> SolveResult:
+    """FISTA with backtracking and adaptive restart (O'Donoghue–Candès).
+
+    ``backend="pallas"`` evaluates the SGL/aSGL prox with the fused kernel
+    (``kernels.ops.sgl_prox_flat``; interpret mode off-TPU).
+    """
 
     lam = jnp.asarray(lam, beta0.dtype)
+    n = prob.X.shape[0]
 
+    if backend == "pallas":
+        from ..kernels.ops import sgl_prox_flat
+
+        def prox(z, t):
+            return sgl_prox_flat(z, t, penalty.g, penalty.alpha,
+                                 penalty.v, penalty.w)
+    else:
+        prox = penalty.prox
+
+    # Matvec accounting: eta at the momentum point is the exact linear
+    # combination of the carried candidate etas (z = b + mom*(b - b_prev)),
+    # so the per-iteration cost is ONE gradient matvec plus one fresh
+    # X @ candidate per line-search probe — not the three rederivations of
+    # X @ z (intercept, residual, loss) the naive formulation pays.
     class S(NamedTuple):
         beta: jnp.ndarray
-        z: jnp.ndarray        # momentum point
-        t: jnp.ndarray        # momentum scalar
+        eta_beta: jnp.ndarray  # X @ beta
+        z: jnp.ndarray         # momentum point
+        eta_z: jnp.ndarray     # X @ z
+        t: jnp.ndarray         # momentum scalar
         c: jnp.ndarray
         step: jnp.ndarray
         it: jnp.ndarray
-        delta: jnp.ndarray    # last relative coefficient change
+        delta: jnp.ndarray     # last relative coefficient change
 
     def cond(s: S):
         return (s.it < max_iters) & (s.delta > tol)
 
     def body(s: S):
-        c = _update_intercept(prob, s.z, s.c)
-        g, f = _grad_and_loss(prob, s.z, c)
+        c = _intercept_from_eta(prob, s.eta_z, s.c)
+        r = residual_from_eta(prob, s.eta_z, c)
+        g = -(prob.X.T @ r) / n
+        f = loss_value_from_eta(prob, s.eta_z, c)
+
+        def candidate(step):
+            b = prox(s.z - step * g, step * lam)
+            eta_b = prob.X @ b
+            return b, eta_b, loss_value_from_eta(prob, eta_b, c)
+
         # backtracking line search on the smooth part at the momentum point
         def bt_cond(carry):
-            step, it = carry
-            b_new = penalty.prox(s.z - step * g, step * lam)
+            step, it, b_new, eta_new, f_new = carry
             d = b_new - s.z
-            f_new = loss_value(prob, b_new, c)
             ub = f + jnp.dot(g, d) + 0.5 * jnp.dot(d, d) / step
             # relative slack: the f32 rounding noise of the loss evaluation
             # would otherwise trigger endless backtracking near convergence
             slack = 1e-6 * jnp.abs(f) + 1e-10
             return (f_new > ub + slack) & (it < max_bt)
 
-        step, _ = jax.lax.while_loop(bt_cond, lambda cr: (cr[0] * bt, cr[1] + 1),
-                                     (s.step, jnp.array(0)))
-        beta_new = penalty.prox(s.z - step * g, step * lam)
+        def bt_body(carry):
+            step, it = carry[0] * bt, carry[1] + 1
+            return (step, it, *candidate(step))
+
+        step, _, beta_new, eta_new, _ = jax.lax.while_loop(
+            bt_cond, bt_body, (s.step, jnp.array(0), *candidate(s.step)))
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t**2))
-        z_new = beta_new + ((s.t - 1.0) / t_new) * (beta_new - s.beta)
+        mom = (s.t - 1.0) / t_new
+        z_new = beta_new + mom * (beta_new - s.beta)
+        eta_z_new = eta_new + mom * (eta_new - s.eta_beta)
         # adaptive restart on non-monotone progress
         restart = jnp.dot(s.z - beta_new, beta_new - s.beta) > 0
         z_new = jnp.where(restart, beta_new, z_new)
+        eta_z_new = jnp.where(restart, eta_new, eta_z_new)
         t_new = jnp.where(restart, 1.0, t_new)
         denom = jnp.maximum(jnp.max(jnp.abs(beta_new)), 1.0)
         delta = jnp.max(jnp.abs(beta_new - s.beta)) / denom
         # monotone non-increasing step: re-growing it is unsafe once the
         # acceptance test is rounding-noise dominated near convergence
-        return S(beta_new, z_new, t_new, c, step, s.it + 1, delta)
+        return S(beta_new, eta_new, z_new, eta_z_new, t_new, c, step,
+                 s.it + 1, delta)
 
-    s0 = S(beta0, beta0, jnp.array(1.0, beta0.dtype), jnp.asarray(c0, beta0.dtype),
-           jnp.asarray(step0, beta0.dtype), jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
+    eta0 = prob.X @ beta0
+    s0 = S(beta0, eta0, beta0, eta0, jnp.array(1.0, beta0.dtype),
+           jnp.asarray(c0, beta0.dtype), jnp.asarray(step0, beta0.dtype),
+           jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
     s = jax.lax.while_loop(cond, body, s0)
     return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step)
 
@@ -141,8 +173,11 @@ def atos(prob: Problem, penalty: Penalty, lam, beta0, c0=0.0, step0=1.0,
         # changes (PG18's rescaling); naive Davis-Yin breaks under adaptive
         # steps because z is implicitly scaled by the step.
         w = (s.z - x_g) / s.step
-        c = _update_intercept(prob, x_g, s.c)
-        grad, f = _grad_and_loss(prob, x_g, c)
+        eta_g = prob.X @ x_g      # one matvec feeds intercept, grad and loss
+        c = _intercept_from_eta(prob, eta_g, s.c)
+        r = residual_from_eta(prob, eta_g, c)
+        grad = -(prob.X.T @ r) / prob.X.shape[0]
+        f = loss_value_from_eta(prob, eta_g, c)
 
         def bt_cond(carry):
             step, it = carry
@@ -172,7 +207,12 @@ SOLVERS = {"fista": fista, "atos": atos}
 
 
 def solve(prob: Problem, penalty: Penalty, lam, beta0=None, c0=0.0,
-          solver: str = "fista", **kw) -> SolveResult:
+          solver: str = "fista", backend: str = "jnp", **kw) -> SolveResult:
     if beta0 is None:
         beta0 = jnp.zeros((prob.p,), prob.X.dtype)
+    if backend != "jnp":
+        if solver != "fista":
+            raise ValueError(f"backend={backend!r} is implemented for the "
+                             "fista solver only")
+        kw["backend"] = backend
     return SOLVERS[solver](prob, penalty, lam, beta0, c0, **kw)

@@ -28,6 +28,32 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..models.config import ModelConfig, ShapeCell
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
+    """Version-proof ``shard_map``.
+
+    Newer JAX exposes ``jax.shard_map(..., axis_names=, check_vma=)``; older
+    releases only have ``jax.experimental.shard_map.shard_map(..., auto=,
+    check_rep=)``.  Translate between the two so call sites are uniform.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
     mesh: Mesh

@@ -8,6 +8,8 @@ implementations and the kernels with one keyword.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -19,9 +21,16 @@ from .sgl_prox import sgl_prox_padded
 from .xt_resid import xt_resid
 
 
+@functools.lru_cache(maxsize=1)
+def _default_interpret() -> bool:
+    # probed once per process: the backend cannot change under our feet, and
+    # this sits on the solver's per-iteration prox path
+    return jax.default_backend() != "tpu"
+
+
 def _resolve_interpret(interpret):
     if interpret is None:
-        return jax.default_backend() != "tpu"
+        return _default_interpret()
     return bool(interpret)
 
 

@@ -154,7 +154,8 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, mesh=None,
     t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.analysis.roofline import compiled_cost_analysis
+    cost = compiled_cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
 
     def _get(obj, name):

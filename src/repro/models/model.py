@@ -191,8 +191,9 @@ def _moe_spmd(cfg: ModelConfig, plan, h, p):
                          capacity_factor=cfg.capacity_factor, model_axis=tp)
         return out.reshape(Bl, Sl, d)
 
+    from ..distributed.sharding import shard_map
     bspec = P(dax, None, None)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=plan.mesh,
         in_specs=(bspec, P(fs, tp if e_tp else None), P(None, fs, tp),
                   P(None, fs, tp), P(None, tp, fs)),

@@ -1,0 +1,91 @@
+"""Deterministic stand-in for `hypothesis` when the real package is absent.
+
+Activated by ``tests/conftest.py`` only on ImportError, so an installed
+hypothesis always wins.  Implements the small subset the test-suite uses —
+``given`` / ``settings`` / ``strategies.{integers,floats,sampled_from}`` —
+with a seeded RNG per test so runs are reproducible.  Unlike the real
+library there is no shrinking: a failing example fails the test directly
+with the drawn arguments in the assertion traceback.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-compat"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper(*fixture_args, **fixture_kw):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.adler32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(n):
+                args = [s.draw(rng) for s in arg_strategies]
+                kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*fixture_args, *args, **fixture_kw, **kw)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            if ran == 0:
+                # parity with real hypothesis, which errors when assume()
+                # rejects every example — never pass vacuously
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume() rejected all {n} examples")
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

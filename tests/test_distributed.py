@@ -113,12 +113,13 @@ def test_compressed_psum_numerics():
         from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum
+        from repro.distributed.sharding import shard_map
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
 
         g = jax.random.normal(jax.random.PRNGKey(0), (2, 256)) * 3.0
         err0 = jnp.zeros((2, 256))
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=(P("pod", "data"), P("pod", "data")),
                  out_specs=(P("pod", "data"), P("pod", "data")), check_vma=False)
         def f(g, e):

@@ -1,0 +1,180 @@
+"""Device-resident path engine: equivalence with the seed driver, the
+kernel (pallas) backend, restricted-penalty construction, and batched CV."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GroupInfo, Penalty, Problem, cv_fit_path, fit_path,
+                        pca_weights, restrict_penalty, standardize)
+from repro.core.engine import bucket_width
+from repro.core.path_reference import fit_path_reference
+
+
+def synth(seed=0, n=60, p=120, m=12, loss="linear", active_groups=3, snr=2.0):
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([p // m] * m)
+    X = standardize(rng.normal(size=(n, p)))
+    beta = np.zeros(p)
+    for gi in rng.choice(m, active_groups, replace=False):
+        s = gi * (p // m)
+        k = max(1, (p // m) // 3)
+        beta[s:s + k] = rng.normal(0, snr, k)
+    eta = X @ beta
+    if loss == "linear":
+        y = eta + 0.4 * rng.normal(size=n)
+    else:
+        y = (rng.uniform(size=n) < 1 / (1 + np.exp(-eta))).astype(float)
+    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32), loss, True)
+    return prob, g
+
+
+# ---------------------------------------------------------------------------
+# engine vs seed driver
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss", ["linear", "logistic"])
+@pytest.mark.parametrize("mode", ["dfr", "sparsegl", None])
+def test_engine_matches_reference(loss, mode):
+    prob, g = synth(loss=loss)
+    pen = Penalty(g, 0.95)
+    r0 = fit_path_reference(prob, pen, screen=mode, length=10, term=0.2, tol=1e-6)
+    r1 = fit_path(prob, pen, screen=mode, length=10, term=0.2, tol=1e-6)
+    # logistic curvature makes f32 coefficient agreement between the two
+    # solver formulations a decade looser than the linear case
+    atol = 2e-4 if loss == "linear" else 2e-3
+    assert np.max(np.abs(r0.betas - r1.betas)) < atol
+    assert np.max(np.abs(r0.intercepts - r1.intercepts)) < atol
+
+
+@pytest.mark.parametrize("mode", ["gap", "gap_dynamic"])
+def test_engine_matches_reference_gap(mode):
+    prob, g = synth(seed=4)
+    pen = Penalty(g, 0.9)
+    r0 = fit_path_reference(prob, pen, screen=mode, length=10, term=0.2, tol=1e-6)
+    r1 = fit_path(prob, pen, screen=mode, length=10, term=0.2, tol=1e-6)
+    assert np.max(np.abs(r0.betas - r1.betas)) < 2e-4
+
+
+def test_engine_matches_reference_asgl():
+    prob, g = synth(seed=3)
+    v, w = pca_weights(prob.X, g, 0.1, 0.1)
+    pen = Penalty(g, 0.95, v, w)
+    r0 = fit_path_reference(prob, pen, screen="dfr", length=10, term=0.2, tol=1e-6)
+    r1 = fit_path(prob, pen, screen="dfr", length=10, term=0.2, tol=1e-6)
+    assert np.max(np.abs(r0.betas - r1.betas)) < 2e-4
+
+
+def test_engine_alpha_zero_and_one():
+    """Group-lasso (alpha=0) and lasso (alpha=1) corners of the rule."""
+    prob, g = synth(seed=5)
+    for alpha in (0.0, 1.0):
+        pen = Penalty(g, alpha)
+        r0 = fit_path_reference(prob, pen, screen="dfr", length=8, term=0.3, tol=1e-6)
+        r1 = fit_path(prob, pen, screen="dfr", length=8, term=0.3, tol=1e-6)
+        assert np.max(np.abs(r0.betas - r1.betas)) < 2e-4, alpha
+
+
+# ---------------------------------------------------------------------------
+# pallas backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dfr", "sparsegl"])
+def test_backend_pallas_matches_jnp(mode):
+    prob, g = synth(seed=6)
+    pen = Penalty(g, 0.95)
+    r_j = fit_path(prob, pen, screen=mode, length=8, term=0.2, tol=1e-6)
+    r_p = fit_path(prob, pen, screen=mode, length=8, term=0.2, tol=1e-6,
+                   backend="pallas")
+    assert np.max(np.abs(r_j.betas - r_p.betas)) < 1e-5
+
+
+def test_backend_pallas_asgl():
+    prob, g = synth(seed=7)
+    v, w = pca_weights(prob.X, g, 0.1, 0.1)
+    pen = Penalty(g, 0.95, v, w)
+    r_j = fit_path(prob, pen, screen="dfr", length=6, term=0.3, tol=1e-6)
+    r_p = fit_path(prob, pen, screen="dfr", length=6, term=0.3, tol=1e-6,
+                   backend="pallas")
+    assert np.max(np.abs(r_j.betas - r_p.betas)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# restricted-penalty construction (the bucketed-gather layout)
+# ---------------------------------------------------------------------------
+
+def test_restrict_penalty_prox_matches_full():
+    """prox on the restricted layout == gathered prox of the masked full
+    vector, for plain SGL and aSGL (the screened-out coordinates are zero,
+    so both compute the same group norms and thresholds)."""
+    rng = np.random.default_rng(0)
+    p, m = 96, 8
+    g = GroupInfo.from_sizes([p // m] * m)
+    mask = rng.uniform(size=p) < 0.4
+    width = bucket_width(int(mask.sum()), p)
+    idx_pad = jnp.nonzero(jnp.asarray(mask), size=width, fill_value=p)[0]
+    z = rng.normal(size=p).astype(np.float32)
+    z_masked = jnp.asarray(np.where(mask, z, 0.0), jnp.float32)
+    z_ext = jnp.concatenate([z_masked, jnp.zeros((1,), jnp.float32)])
+    v = jnp.asarray(rng.uniform(0.5, 2.0, p), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, m), jnp.float32)
+    for pen in (Penalty(g, 0.7), Penalty(g, 0.7, v, w)):
+        pen_sub = restrict_penalty(pen, jnp.asarray(mask), idx_pad, width)
+        got = np.asarray(pen_sub.prox(z_ext[idx_pad], 0.3))
+        want = np.asarray(pen.prox(z_masked, 0.3))[np.where(mask)[0]]
+        np.testing.assert_allclose(got[: int(mask.sum())], want, atol=1e-6)
+
+
+def test_buckets_are_log_p():
+    """The whole path compiles O(log p) solver variants, not O(path length)."""
+    prob, g = synth(seed=8)
+    pen = Penalty(g, 0.95)
+    r = fit_path(prob, pen, screen="dfr", length=15, term=0.1)
+    assert len(r.buckets) <= int(np.log2(prob.p)) + 2
+    for b in r.buckets:
+        assert b == prob.p or (b & (b - 1)) == 0   # power of two (or full)
+
+
+def test_engine_compile_cache_shared_across_fits():
+    """A second fit with equal shapes must not add solver compilations."""
+    from repro.core.engine import fused_path_step
+    prob, g = synth(seed=9)
+    pen = Penalty(g, 0.95)
+    fit_path(prob, pen, screen="dfr", length=8, term=0.3)
+    n_compiled = fused_path_step._cache_size()
+    prob2, _ = synth(seed=10)
+    fit_path(prob2, pen, screen="dfr", length=8, term=0.3)
+    assert fused_path_step._cache_size() == n_compiled
+
+
+# ---------------------------------------------------------------------------
+# batched CV
+# ---------------------------------------------------------------------------
+
+def test_user_lambda_grid_solves_first_point():
+    """A user-supplied grid head below lambda_1 must be solved, not
+    hardwired to the null model (cv_fit_path refits full-data grids on
+    folds whose own lambda_1 differs)."""
+    from repro.core import path_start
+    prob, g = synth(seed=12)
+    pen = Penalty(g, 0.95)
+    lam1 = float(path_start(prob, pen))
+    r = fit_path(prob, pen, lambdas=np.array([0.5 * lam1, 0.3 * lam1]),
+                 screen="dfr", tol=1e-6)
+    assert r.metrics["active_v"][0] > 0
+    # and it agrees with the same lambda solved mid-path
+    r2 = fit_path(prob, pen, lambdas=np.array([lam1, 0.5 * lam1, 0.3 * lam1]),
+                  screen="dfr", tol=1e-6)
+    assert np.max(np.abs(r.betas[0] - r2.betas[1])) < 2e-4
+
+
+def test_cv_fit_path_smoke():
+    prob, g = synth(seed=11, n=66, p=120)
+    X, y = np.asarray(prob.X), np.asarray(prob.y)
+    res = cv_fit_path(X, y, g, alphas=(0.5, 0.95), folds=3, length=8, term=0.2)
+    assert res.cv_error.shape == (2, 8)
+    assert np.all(np.isfinite(res.cv_error))
+    assert res.best_alpha in (0.5, 0.95)
+    ai, li = res.best_index
+    assert res.cv_error[ai, li] == res.best_error
+    # the best error beats the null-model end of the worst path
+    assert res.best_error <= res.cv_error.max()

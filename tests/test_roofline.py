@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.analysis.roofline import cell_flops, forward_flops
+from repro.analysis.roofline import (cell_flops, compiled_cost_analysis,
+                                     forward_flops)
 from repro.configs import get_reduced
 from repro.models.config import ShapeCell
 from repro.models.model import abstract_params
@@ -21,7 +22,7 @@ from repro.models.steps import build_prefill_step, input_specs
 
 def hlo_flops(fn, *args):
     compiled = jax.jit(fn).lower(*args).compile()
-    return compiled.cost_analysis()["flops"]
+    return compiled_cost_analysis(compiled)["flops"]
 
 
 def test_scan_body_counted_once():
@@ -56,7 +57,7 @@ def test_analytic_flops_matches_unrolled_hlo(arch):
     params = abstract_params(cfg)
     batch = input_specs(cfg, cell)
     compiled = jax.jit(fn).lower(params, batch).compile()
-    got = compiled.cost_analysis()["flops"]
+    got = compiled_cost_analysis(compiled)["flops"]
     want = forward_flops(cfg, cell.seq_len, cell.global_batch,
                          impl="masked_full")["total"]
     ratio = got / want
@@ -73,7 +74,7 @@ def test_train_multiplier_vs_hlo():
     opt = jax.eval_shape(init_opt_state, params)
     batch = input_specs(cfg, cell)
     fn = build_train_step(cfg, unroll=True)
-    got = jax.jit(fn).lower(params, opt, batch).compile().cost_analysis()["flops"]
+    got = compiled_cost_analysis(jax.jit(fn).lower(params, opt, batch).compile())["flops"]
     want = cell_flops(cfg, cell, impl="masked_full")["total"]
     ratio = got / want
     assert 0.6 < ratio < 1.5, (got, want, ratio)
