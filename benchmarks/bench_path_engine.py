@@ -21,8 +21,12 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SGL
 from repro.core import GroupInfo, Penalty, Problem, fit_path, standardize
 from repro.core.path_reference import fit_path_reference
+
+# the estimator wrapper must not tax the hot path (ISSUE 2 benchmark guard)
+MAX_ESTIMATOR_OVERHEAD = 0.05
 
 SCALES = {
     "smoke": dict(n=200, p=2048, m=32, length=20),
@@ -74,10 +78,13 @@ def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
         "seed_driver": {"total_s": t_seed, "screen_s": r_seed.screen_time,
                         "solve_s": r_seed.solve_time},
     }
+    t_eng_jnp = None
     for backend in backends:
         r_eng, t_eng = _timed(
             lambda: fit_path(prob, pen, screen="dfr", length=length, term=0.1,
                              backend=backend), reps)
+        if backend == "jnp":
+            t_eng_jnp = t_eng
         result[f"engine_{backend}"] = {
             "total_s": t_eng,
             "screen_s": r_eng.screen_time,
@@ -86,10 +93,31 @@ def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
             "max_abs_dbeta_vs_seed": float(np.max(np.abs(r_eng.betas - r_seed.betas))),
             "speedup_vs_seed": t_seed / t_eng,
         }
+
+    # estimator-API wrapper overhead vs calling fit_path directly: the same
+    # problem through repro.api.SGL (same config), asserted under
+    # MAX_ESTIMATOR_OVERHEAD so the redesign provably doesn't tax the hot path
+    overhead = None
+    if t_eng_jnp is not None:
+        g = pen.g
+        Xh, yh = np.asarray(prob.X), np.asarray(prob.y)
+        est = SGL(g, alpha=pen.alpha, screen="dfr", length=length, term=0.1)
+        _, t_est = _timed(lambda: est.fit(Xh, yh), reps)
+        overhead = t_est / t_eng_jnp - 1.0
+        result["estimator_api"] = {
+            "total_s": t_est,
+            "overhead_vs_fit_path": overhead,
+            "max_overhead_allowed": MAX_ESTIMATOR_OVERHEAD,
+        }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result, indent=2))
     print(f"[bench_path_engine] wrote {out}")
+    # guard AFTER recording: a noisy timing must not discard the trajectory
+    if overhead is not None:
+        assert overhead < MAX_ESTIMATOR_OVERHEAD, (
+            f"estimator wrapper overhead {overhead:.1%} exceeds "
+            f"{MAX_ESTIMATOR_OVERHEAD:.0%} of direct fit_path wall-clock")
     return result
 
 

@@ -1,15 +1,17 @@
 """Table A36: cross-validation improvement factor (tuning lambda AND alpha).
 
-Driven by :func:`repro.core.cv.cv_fit_path`: every fold presents the same
-problem shape, so the whole folds x (lambda, alpha) grid shares the path
-engine's compiled-solver cache (one bucketed compile set per alpha) instead
-of recompiling per fit as the pre-engine grid loop effectively did.
+Driven through the estimator API (:class:`repro.api.SGLCV`, which wraps
+:func:`repro.core.cv.cv_fit_path`): every fold presents the same problem
+shape and one static ``FitConfig``, so the whole folds x (lambda, alpha)
+grid shares the path engine's compiled-solver cache (one bucketed compile
+set per alpha) instead of recompiling per fit as the pre-engine grid loop
+effectively did.
 """
 import time
 
 import numpy as np
 
-from repro.core import cv_fit_path
+from repro.api import FitConfig, SGLCV
 from repro.data import make_synthetic
 from .common import emit
 
@@ -22,15 +24,17 @@ def run(scale="smoke"):
     times = {}
     best = None
     for screen in (None, "dfr"):
-        kw = dict(alphas=alphas, loss=d.loss, folds=folds, length=12,
-                  screen=screen)
-        cv_fit_path(d.X, d.y, d.groups, **kw)      # warm (jit) pass
+        cfg = FitConfig(screen=screen, length=12)
+        est = SGLCV(d.groups, alphas=alphas, folds=folds, loss=d.loss,
+                    config=cfg)
+        est.fit(d.X, d.y)                          # warm (jit) pass
         t0 = time.perf_counter()
-        res = cv_fit_path(d.X, d.y, d.groups, **kw)
+        est = SGLCV(d.groups, alphas=alphas, folds=folds, loss=d.loss,
+                    config=cfg).fit(d.X, d.y)
         times[screen] = time.perf_counter() - t0
         if screen == "dfr":
-            best = res
+            best = est
     emit("cv/dfr", 0.0,
          f"improvement={times[None]/times['dfr']:.2f}x "
-         f"best_alpha={best.best_alpha:g} best_lambda={best.best_lambda:.4g} "
+         f"best_alpha={best.best_alpha_:g} best_lambda={best.best_lambda_:.4g} "
          f"(grid={len(alphas)}alphas x {folds}folds)")

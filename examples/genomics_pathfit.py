@@ -1,44 +1,36 @@
 """Genomics-style path fit with concurrent (lambda, alpha) tuning via CV.
 
-DFR makes the full grid affordable — the paper's Appendix D.7 workflow:
+DFR makes the full grid affordable — the paper's Appendix D.7 workflow,
+driven through the estimator API (``SGLCV`` shares one compiled solver
+cache across all folds x alphas):
+
     PYTHONPATH=src python examples/genomics_pathfit.py
 """
 import time
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import Penalty, Problem, fit_path
+from repro.api import SGLCV
 from repro.data import make_synthetic
 
 d = make_synthetic(seed=1, n=150, p=2000, m=40, size_range=(10, 100),
                    group_sparsity=0.1, var_sparsity=0.2)
-alphas = [0.5, 0.9, 0.95]
-folds = 3
-idx = np.arange(d.X.shape[0])
 
 t0 = time.perf_counter()
-cv_err = {}
-for alpha in alphas:
-    errs = []
-    for f in range(folds):
-        tr, te = idx[idx % folds != f], idx[idx % folds == f]
-        prob = Problem(jnp.asarray(d.X[tr]), jnp.asarray(d.y[tr]))
-        res = fit_path(prob, Penalty(d.groups, alpha), screen="dfr", length=20)
-        pred = d.X[te] @ res.betas.T + res.intercepts[None, :]
-        errs.append(((d.y[te, None] - pred) ** 2).mean(axis=0))
-    cv_err[alpha] = np.mean(errs, axis=0)
-
-best = min(((a, int(e.argmin()), e.min()) for a, e in cv_err.items()),
-           key=lambda t: t[2])
+cv = SGLCV(d.groups, alphas=(0.5, 0.9, 0.95), folds=3, length=20,
+           screen="dfr").fit(d.X, d.y)
 print(f"grid (lambda x alpha) CV in {time.perf_counter()-t0:.1f}s with DFR")
-print(f"best: alpha={best[0]}, path index {best[1]}, cv mse {best[2]:.3f}")
+ai, li = cv.cv_result_.best_index
+print(f"best: alpha={cv.best_alpha_:g}, path index {li}, "
+      f"cv mse {cv.cv_result_.best_error:.3f}")
 
-# refit at the winner on all data
-prob = Problem(jnp.asarray(d.X), jnp.asarray(d.y))
-res = fit_path(prob, Penalty(d.groups, best[0]), screen="dfr", length=20)
-k = best[1]
-sel = np.flatnonzero(res.betas[k])
+# the CV fit already refit at the winner on all data — read off the support
+sel = np.flatnonzero(cv.coef_)
 true = np.flatnonzero(d.beta)
 print(f"selected {len(sel)} features; recall of true support: "
       f"{len(set(sel) & set(true))}/{len(true)}")
+
+# ship the fitted path to serving
+cv.save("/tmp/genomics_sgl.npz")
+print("saved fitted path -> /tmp/genomics_sgl.npz "
+      "(python -m repro.launch.serve_sgl --model /tmp/genomics_sgl.npz)")

@@ -1,34 +1,56 @@
-"""Quickstart: fit a sparse-group lasso path with DFR screening.
+"""Quickstart: the estimator API — fit, predict, tune, save, serve.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Two-layer design: a frozen ``FitConfig`` owns every fitting knob (and keys
+the engine's compile caches); sklearn-style estimators own the data policy
+and the fitted path.  ``fit_path``/``cv_fit_path`` remain available for
+research code that wants the raw ``PathResult``.
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import GroupInfo, Penalty, Problem, fit_path, standardize
+from repro.api import SGL, SGLCV, FitConfig, GroupInfo
+from repro.core import standardize
 
 # toy data: 20 groups of 25 features, 3 active groups
 rng = np.random.default_rng(0)
 n, m, gs = 120, 20, 25
 g = GroupInfo.from_sizes([gs] * m)
-X = standardize(rng.normal(size=(n, g.p)))
+X = np.asarray(standardize(rng.normal(size=(n, g.p))))
 beta = np.zeros(g.p)
 beta[:5] = rng.normal(0, 2, 5)
 beta[50:53] = rng.normal(0, 2, 3)
 beta[200:204] = rng.normal(0, 2, 4)
 y = X @ beta + 0.5 * rng.normal(size=n)
 
-prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32))
-pen = Penalty(g, alpha=0.95)
+# ---- fit a DFR-screened path (vs an unscreened baseline) -------------------
+model = SGL(g, alpha=0.95, length=30, term=0.1).fit(X, y)
+base = SGL(g, alpha=0.95, config=FitConfig(screen=None, length=30, term=0.1)).fit(X, y)
 
-res = fit_path(prob, pen, screen="dfr", length=30, term=0.1, verbose=False)
-base = fit_path(prob, pen, screen=None, length=30, term=0.1)
-
-print(f"path of {len(res.lambdas)} lambdas, lambda_1 = {res.lambdas[0]:.4f}")
+d = model.diagnostics_
+print(f"path of {len(model.lambdas_)} lambdas, lambda_1 = {model.lambdas_[0]:.4f}")
 print(f"screened fit == unscreened fit: "
-      f"max|beta diff| = {np.abs(res.betas - base.betas).max():.2e}")
-print(f"mean input proportion: {np.mean(res.metrics['opt_prop_v']):.3f} "
-      f"(screening kept {100*np.mean(res.metrics['opt_prop_v']):.1f}% of features)")
-print(f"KKT violations: {sum(res.metrics['kkt_viols'])}")
-print(f"final active variables: {res.metrics['active_v'][-1]} "
-      f"in {res.metrics['active_g'][-1]} groups (truth: 12 in 3 groups)")
+      f"max|beta diff| = {np.abs(model.coef_path_ - base.coef_path_).max():.2e}")
+print(d.summary())
+print(f"(screening kept {100 * d.opt_prop_v.mean():.1f}% of features; "
+      f"truth: 12 active in 3 groups)")
+
+# ---- predict: one device-side matmul scores EVERY lambda -------------------
+preds = model.predict(X)                       # [n, length]
+r2 = model.score(X, y)                         # [length] R^2 along the path
+k = int(np.argmax(r2))
+print(f"best in-sample R^2 {r2[k]:.3f} at lambda={model.lambdas_[k]:.4f} "
+      f"(predict(X) -> {preds.shape})")
+
+# ---- tune (lambda, alpha) by CV, refit at the winner -----------------------
+cv = SGLCV(g, alphas=(0.5, 0.95), folds=3, length=15, term=0.1).fit(X, y)
+print(f"CV winner: alpha={cv.best_alpha_:g}, lambda={cv.best_lambda_:.4f}, "
+      f"in-sample R^2 at the winner {cv.score(X, y):.3f}")
+print(f"selected {int((np.abs(cv.coef_) > 0).sum())} features at the winner")
+
+# ---- save -> load -> serve: bitwise round-trip through one .npz ------------
+cv.save("/tmp/quickstart_sgl.npz")
+served = SGL.load("/tmp/quickstart_sgl.npz")
+assert np.array_equal(served.predict(X), cv.predict(X))
+print("save/load round-trip: predictions bitwise identical "
+      "(serve with `python -m repro.launch.serve_sgl --model /tmp/quickstart_sgl.npz`)")

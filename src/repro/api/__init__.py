@@ -1,0 +1,35 @@
+"""The public front door for SGL/aSGL fitting, tuning and serving.
+
+Two layers (see ROADMAP architecture notes):
+
+* **Config layer** — :class:`FitConfig` is the one frozen, validated,
+  hashable object that owns every fitting knob; it is a static jax pytree
+  node, so the path engine's compile-cache keys derive from it directly.
+  ``fit_path`` / ``cv_fit_path`` remain available for research code that
+  wants raw :class:`PathResult` access.
+* **Estimator layer** — sklearn-style :class:`SGL` / :class:`AdaptiveSGL` /
+  :class:`SGLCV` with ``fit`` / ``predict`` / ``score`` /
+  ``interpolate(lambda_)``, device-side whole-path prediction
+  (:func:`predict_path`), and single-``.npz`` ``save()``/``load()`` whose
+  round-trip reproduces predictions bitwise — the serving handoff
+  (``python -m repro.launch.serve_sgl --model path.npz``).
+
+    from repro.api import SGL, SGLCV, FitConfig
+
+    model = SGL(groups, alpha=0.95, screen="dfr").fit(X, y)
+    yhat = model.predict(X)                 # [n, l]: every lambda at once
+    model.save("model.npz")
+"""
+from ..core.config import FitConfig
+from ..core.estimator import SGL, AdaptiveSGL, SGLCV, load, predict_path
+from ..core.groups import GroupInfo
+from ..core.losses import Problem
+from ..core.path import PathDiagnostics, PathResult, fit_path
+from ..core.penalties import Penalty
+from ..core.cv import CVResult, cv_fit_path, kfold_indices
+
+__all__ = [
+    "FitConfig", "SGL", "AdaptiveSGL", "SGLCV", "load", "predict_path",
+    "GroupInfo", "Problem", "Penalty", "PathDiagnostics", "PathResult",
+    "fit_path", "CVResult", "cv_fit_path", "kfold_indices",
+]

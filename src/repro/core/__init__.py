@@ -9,8 +9,10 @@ from .solvers import solve, fista, atos, SolveResult
 from .screening import (dfr_screen, dfr_screen_asgl, sparsegl_screen,
                         gap_safe_screen, ScreenResult)
 from .kkt import kkt_violations, kkt_check, kkt_gradient
-from .adaptive import pca_weights, asgl_path_start
+from .adaptive import pca_weights, asgl_path_start, adaptive_weights
+from .config import FitConfig
 from .engine import PathEngine, bucket_width
-from .path import fit_path, path_start, lambda_path, PathResult
+from .path import fit_path, path_start, lambda_path, PathResult, PathDiagnostics
 from .path_reference import fit_path_reference
-from .cv import cv_fit_path, CVResult
+from .cv import cv_fit_path, CVResult, kfold_indices
+from .estimator import SGL, AdaptiveSGL, SGLCV, predict_path

@@ -40,6 +40,15 @@ def pca_weights(X: jnp.ndarray, g: GroupInfo, gamma1: float = 0.1,
     return v, w
 
 
+def adaptive_weights(X: jnp.ndarray, g: GroupInfo, config) -> tuple:
+    """(v, w) for a :class:`~repro.core.config.FitConfig`: PCA weights with
+    the config's (gamma1, gamma2) when ``config.adaptive``, else (None, None)
+    — the one place the estimator/CV layers derive aSGL weights from."""
+    if not config.adaptive:
+        return None, None
+    return pca_weights(X, g, config.gamma1, config.gamma2)
+
+
 def asgl_path_start(X, y, g: GroupInfo, alpha: float, v, w, n=None,
                     iters: int = 80) -> jnp.ndarray:
     """lambda_1 for aSGL by per-group bisection (Appendix B.2.1)."""

@@ -1,0 +1,184 @@
+"""`FitConfig`: the one hashable object that owns every fitting knob.
+
+Before this layer, screen mode / backend / solver / tolerances / path shape /
+adaptive settings were loose kwargs threaded through ``fit_path`` ->
+``PathEngine`` -> the solvers, and every new scenario was a signature change
+in four files.  ``FitConfig`` is a frozen, validated dataclass registered as
+a **static** jax pytree node (``jax.tree_util.register_static``): it flattens
+to zero leaves, so the engine's module-level jitted steps can take it as a
+plain argument and the compile cache keys on its hash — one object decides
+recompilation, not a scatter of ``static_argnames``.
+
+Two layers consume it:
+
+* the config layer (``fit_path`` / ``PathEngine`` / ``cv_fit_path`` /
+  ``solve``) takes ``config=FitConfig(...)`` and keeps the legacy kwargs as a
+  thin shim (`FitConfig.from_kwargs`);
+* the estimator layer (:mod:`repro.core.estimator`, re-exported from
+  ``repro.api``) builds a ``FitConfig`` from sklearn-style constructor
+  arguments and serializes it alongside the fitted path (`to_dict` /
+  `from_dict` survive a json round-trip inside the ``.npz``).
+
+``alpha`` (the l1/group mixing weight, paper Eq. 2) lives here so estimators
+and CV grids are fully described by one object; ``fit_path`` itself still
+takes the materialized :class:`~repro.core.penalties.Penalty` and documents
+that the penalty wins if the two disagree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import jax
+
+SCREEN_MODES = (None, "dfr", "sparsegl", "gap", "gap_dynamic")
+SOLVERS = ("fista", "atos")
+BACKENDS = ("jnp", "pallas")
+EPS_METHODS = ("exact", "bisect", "kernel")
+DTYPES = ("float32", "float64")
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    """Everything a path fit needs beyond (data, groups): validated once at
+    construction, hashable, and static under jit."""
+
+    # -- screening / solving ------------------------------------------------
+    screen: Optional[str] = "dfr"     # None | dfr | sparsegl | gap | gap_dynamic
+    solver: str = "fista"             # fista | atos
+    backend: str = "jnp"              # jnp | pallas
+    tol: float = 1e-5                 # coefficient-change stopping tolerance
+    max_iters: int = 5000             # per restricted solve
+    kkt_max_rounds: int = 20          # violation re-entry rounds per path point
+    eps_method: str = "exact"         # epsilon-norm evaluation (exact | bisect)
+    dynamic_every: int = 25           # gap_dynamic re-screen cadence (iters)
+    # -- path shape ---------------------------------------------------------
+    alpha: float = 0.95               # l1 weight in the SGL penalty (Eq. 2)
+    length: int = 50                  # lambda path length
+    term: float = 0.1                 # lambda_min / lambda_1 (paper Table A1)
+    # -- adaptive (aSGL) ----------------------------------------------------
+    adaptive: bool = False
+    gamma1: float = 0.1               # variable-weight exponent (App. B.3)
+    gamma2: float = 0.1               # group-weight exponent
+    # -- data handling ------------------------------------------------------
+    standardize: bool = False         # center + unit-l2 columns inside fit()
+    fit_intercept: bool = True
+    dtype: str = "float32"            # float64 needs jax_enable_x64
+    # -- engine -------------------------------------------------------------
+    bucket_min: int = 8               # smallest power-of-two solver bucket
+    verbose: bool = False
+
+    def __post_init__(self):
+        def bad(msg):
+            raise ValueError(f"FitConfig: {msg}")
+        if self.screen not in SCREEN_MODES:
+            bad(f"unknown screen mode {self.screen!r} (choose from {SCREEN_MODES})")
+        if self.solver not in SOLVERS:
+            bad(f"unknown solver {self.solver!r} (choose from {SOLVERS})")
+        if self.backend not in BACKENDS:
+            bad(f"unknown backend {self.backend!r} (choose from {BACKENDS})")
+        if self.eps_method not in EPS_METHODS:
+            bad(f"unknown eps_method {self.eps_method!r} (choose from {EPS_METHODS})")
+        if self.dtype not in DTYPES:
+            bad(f"unknown dtype {self.dtype!r} (choose from {DTYPES})")
+        if not 0.0 <= self.alpha <= 1.0:
+            bad(f"alpha must be in [0, 1], got {self.alpha}")
+        if not self.tol > 0:
+            bad(f"tol must be positive, got {self.tol}")
+        if not 0.0 < self.term <= 1.0:
+            bad(f"term must be in (0, 1], got {self.term}")
+        if self.length < 1:
+            bad(f"length must be >= 1, got {self.length}")
+        if self.max_iters < 1:
+            bad(f"max_iters must be >= 1, got {self.max_iters}")
+        if self.kkt_max_rounds < 1:
+            bad(f"kkt_max_rounds must be >= 1, got {self.kkt_max_rounds}")
+        if self.dynamic_every < 1:
+            bad(f"dynamic_every must be >= 1, got {self.dynamic_every}")
+        if self.bucket_min < 1:
+            bad(f"bucket_min must be >= 1, got {self.bucket_min}")
+        if self.gamma1 < 0 or self.gamma2 < 0:
+            bad(f"gamma1/gamma2 must be >= 0, got ({self.gamma1}, {self.gamma2})")
+        if self.backend == "pallas" and self.solver != "fista":
+            bad("backend='pallas' is implemented for the fista solver only")
+        # scalar fields must be plain hashable Python values: a traced/array
+        # value here would silently defeat the static-pytree registration
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v is not None and not isinstance(v, (bool, int, float, str)):
+                bad(f"field {f.name!r} must be a plain Python scalar, got {type(v)}")
+
+    # -- construction helpers ----------------------------------------------
+
+    def replace(self, **changes) -> "FitConfig":
+        """A new validated config with ``changes`` applied."""
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def from_kwargs(cls, base: Optional["FitConfig"] = None, **kw) -> "FitConfig":
+        """The legacy-kwarg shim: map old ``fit_path``/``cv_fit_path`` loose
+        kwargs onto a (possibly pre-existing) config, ignoring Nones —
+        except ``screen``, where None is a real value (no screening)."""
+        changes = {k: v for k, v in kw.items()
+                   if v is not None or k == "screen"}
+        unknown = set(changes) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise TypeError(f"unknown fit option(s): {sorted(unknown)}")
+        if base is None:
+            return cls(**changes)
+        return base.replace(**changes) if changes else base
+
+    # -- serialization (estimator save()/load() round-trips through json) ---
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FitConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def from_json(cls, s: str) -> "FitConfig":
+        return cls.from_dict(json.loads(s))
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def engine_key(self) -> "EngineKey":
+        """The compile-relevant slice of this config: the one static object
+        the engine's jitted steps key their caches on.  Fields that only
+        shape the Python-side driver loop (length, term, tolerances, KKT
+        rounds, verbosity, ...) are deliberately excluded so fits differing
+        only in those share every compiled solver variant."""
+        return EngineKey(self.solver, self.backend, self.eps_method)
+
+    @property
+    def check_kkt(self) -> bool:
+        """Exact (gap) and no-screen fits cannot produce KKT violations."""
+        return self.screen not in (None, "gap")
+
+    def validate_for(self, loss: str, adaptive: bool) -> None:
+        """Cross-field checks that need the problem: GAP-safe rules exist for
+        linear non-adaptive SGL only (paper Sec. 4)."""
+        if self.screen in ("gap", "gap_dynamic") and (loss != "linear" or adaptive):
+            raise ValueError("GAP-safe implemented for linear SGL only")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineKey:
+    """What the engine's compiled code actually depends on (see
+    :meth:`FitConfig.engine_key`)."""
+
+    solver: str
+    backend: str
+    eps_method: str
+
+
+# zero-leaf pytrees: jit treats a FitConfig/EngineKey argument as a hashable
+# static, so every engine compile-cache key derives from one object
+jax.tree_util.register_static(FitConfig)
+jax.tree_util.register_static(EngineKey)

@@ -1,28 +1,31 @@
 """Batched k-fold cross-validation over the (lambda, alpha) grid.
 
 The path engine's jitted steps live at module level with caches keyed on
-shapes + static config, so CV only has to keep every fold *shape-stable* to
-share one compiled solver cache across the whole folds x (lambda, alpha)
-grid: validation folds are contiguous equal-size blocks of ``n // folds``
-rows (any remainder rows stay in every training set), so each of the
-``folds`` training problems has identical (n_train, p) and every restricted
-solve lands in the same bucketed compilations.  Distinct alphas still
-compile their own prox thresholds (alpha is static on Penalty), but folds
-and lambdas are free.
+shapes + a static :class:`~repro.core.config.FitConfig`, so CV only has to
+keep every fold *shape-stable* to share one compiled solver cache across the
+whole folds x (lambda, alpha) grid: validation folds are contiguous
+equal-size blocks of ``n // folds`` rows (any remainder rows stay in every
+training set — :func:`kfold_indices` warns when that happens), so each of
+the ``folds`` training problems has identical (n_train, p) and every
+restricted solve lands in the same bucketed compilations.  Distinct alphas
+still compile their own prox thresholds (alpha is static on Penalty), but
+folds and lambdas are free.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from .adaptive import pca_weights
+from .config import FitConfig
 from .engine import extend_design
 from .groups import GroupInfo
-from .losses import Problem
-from .path import fit_path, lambda_path, path_start
+from .losses import Problem, standardize as standardize_columns
+from .path import _UNSET, fit_path, lambda_path, path_start
 from .penalties import Penalty
 
 
@@ -45,13 +48,26 @@ class CVResult:
 def kfold_indices(n: int, folds: int):
     """(train_idx, val_idx) pairs with equal train sizes across folds.
 
-    Validation folds are contiguous blocks of ``n // folds`` rows; remainder
-    rows (at the tail) are in every training set.  Equal shapes are what
-    lets all folds share the engine's compiled steps.
+    Validation folds are contiguous blocks of ``n // folds`` rows; the
+    ``n % folds`` remainder rows (at the tail) are in every training set and
+    are therefore NEVER validated.  Equal shapes are what lets all folds
+    share the engine's compiled steps — distributing the remainder across
+    validation folds would give each fold its own (n_train, p) and its own
+    compile cache — so when ``n % folds != 0`` this warns instead of
+    silently dropping the tail: trim the data or pick ``folds`` dividing
+    ``n`` to validate every row.
     """
     fs = n // folds
     if fs == 0:
         raise ValueError(f"folds={folds} > n={n}")
+    rem = n - fs * folds
+    if rem:
+        warnings.warn(
+            f"kfold_indices: n={n} is not divisible by folds={folds}; the "
+            f"last {rem} row(s) stay in every training set and are never "
+            f"validated (shape-stable folds share one compile cache). Trim "
+            f"the data or choose folds dividing n to validate every row.",
+            UserWarning, stacklevel=2)
     out = []
     for f in range(folds):
         val = np.arange(f * fs, (f + 1) * fs)
@@ -69,30 +85,53 @@ def _val_error(X_val, y_val, betas, intercepts, loss: str) -> np.ndarray:
 
 
 def cv_fit_path(X, y, g: GroupInfo, alphas=(0.95,), *, loss: str = "linear",
-                intercept: bool = True, folds: int = 5, length: int = 20,
-                term: float = 0.1, screen="dfr", solver: str = "fista",
-                max_iters: int = 5000, tol: float = 1e-5,
-                eps_method: str = "exact", backend: str = "jnp",
-                adaptive: bool = False, shuffle_seed=None) -> CVResult:
+                intercept: bool = None, folds: int = 5,
+                config: FitConfig = None, length: int = None,
+                term: float = None, screen=_UNSET, solver: str = None,
+                max_iters: int = None, tol: float = None,
+                eps_method: str = None, backend: str = None,
+                adaptive: bool = None, shuffle_seed=None) -> CVResult:
     """K-fold CV of the SGL/aSGL path over an alpha grid.
 
-    Per alpha the lambda path comes from the full data (glmnet convention);
-    each fold refits that path on its training block and scores the held-out
-    block.  All folds share the engine's compiled solver cache.
+    Prefer ``config=FitConfig(...)`` (the individual keywords are the
+    pre-config shim and override matching config fields; ``intercept``
+    defaults to ``config.fit_intercept``, and ``config.standardize``
+    standardizes the columns up front).  Per alpha the
+    lambda path comes from the full data (glmnet convention); each fold
+    refits that path on its training block and scores the held-out block.
+    All folds share the engine's compiled solver cache.
 
     Caveats of the shape-stable split: the ``n % folds`` tail rows are in
-    every training set and never scored, and folds are CONTIGUOUS blocks —
-    pass ``shuffle_seed`` when the rows are not already in random order
-    (e.g. sorted by outcome), or the fold distributions will be skewed.
+    every training set and never scored (:func:`kfold_indices` warns), and
+    folds are CONTIGUOUS blocks — pass ``shuffle_seed`` when the rows are
+    not already in random order (e.g. sorted by outcome), or the fold
+    distributions will be skewed.
     """
+    legacy = dict(solver=solver, length=length, term=term, max_iters=max_iters,
+                  tol=tol, eps_method=eps_method, backend=backend,
+                  adaptive=adaptive)
+    if screen is not _UNSET:
+        legacy["screen"] = screen
+    if config is None and length is None:
+        legacy["length"] = 20                  # pre-config cv default
+    cfg = FitConfig.from_kwargs(config, **legacy)
+    cfg.validate_for(loss, cfg.adaptive)
+    if intercept is None:
+        intercept = cfg.fit_intercept
+
     X = np.asarray(X)
     y = np.asarray(y)
+    if cfg.standardize:
+        # full-data column stats (the estimator refit re-derives the
+        # identical transform from the same full X)
+        X = np.asarray(standardize_columns(X))
     n = X.shape[0]
     if shuffle_seed is not None:
         perm = np.random.default_rng(shuffle_seed).permutation(n)
         X, y = X[perm], y[perm]
     splits = kfold_indices(n, folds)
     alphas = np.asarray(alphas, dtype=np.float64)
+    length = cfg.length
     lambdas = np.zeros((len(alphas), length))
     errs = np.zeros((len(alphas), length, folds))
     # problems, extended designs and (alpha-independent) adaptive weights
@@ -101,21 +140,21 @@ def cv_fit_path(X, y, g: GroupInfo, alphas=(0.95,), *, loss: str = "linear",
     fold_probs = [Problem(jnp.asarray(X[tr]), jnp.asarray(y[tr]), loss, intercept)
                   for tr, _ in splits]
     fold_Xp = [extend_design(prob.X) for prob in fold_probs]
-    vw_full = pca_weights(prob_full.X, g, 0.1, 0.1) if adaptive else (None, None)
-    fold_vw = [pca_weights(prob.X, g, 0.1, 0.1) if adaptive else (None, None)
-               for prob in fold_probs]
+    adaptive = cfg.adaptive
+    vw_full = pca_weights(prob_full.X, g, cfg.gamma1, cfg.gamma2) if adaptive \
+        else (None, None)
+    fold_vw = [pca_weights(prob.X, g, cfg.gamma1, cfg.gamma2) if adaptive
+               else (None, None) for prob in fold_probs]
     t0 = time.perf_counter()
     for a, alpha in enumerate(alphas):
         pen_full = Penalty(g, float(alpha), *vw_full)
-        lam1 = float(path_start(prob_full, pen_full, method=eps_method))
-        lams = lambda_path(lam1, length, term)
+        lam1 = float(path_start(prob_full, pen_full, method=cfg.eps_method))
+        lams = lambda_path(lam1, length, cfg.term)
         lambdas[a] = lams
         for f, ((_, va), prob, Xp, vw) in enumerate(
                 zip(splits, fold_probs, fold_Xp, fold_vw)):
             pen = Penalty(g, float(alpha), *vw)
-            res = fit_path(prob, pen, lambdas=lams, screen=screen, solver=solver,
-                           max_iters=max_iters, tol=tol, eps_method=eps_method,
-                           backend=backend, Xp=Xp)
+            res = fit_path(prob, pen, lambdas=lams, config=cfg, Xp=Xp)
             errs[a, :, f] = _val_error(X[va], y[va], res.betas,
                                        res.intercepts, loss)
     fit_time = time.perf_counter() - t0

@@ -8,15 +8,23 @@ that with three module-level jitted steps whose compile caches are shared
 across fits (CV folds, (lambda, alpha) grids — anything with equal shapes):
 
 * :func:`screen_step`     — gradient-based screening rule + union with the
-                            active set, one jit per (mode, method, backend).
+                            active set, one jit per (mode, config).
 * :func:`fused_path_step` — gather the restricted matrix on-device from a
                             padded index vector (``jnp.nonzero(mask,
                             size=width)``), solve the restricted problem
                             warm-started on (beta, intercept, step), scatter
                             back, evaluate the full gradient and the KKT
-                            violations — one jit per (bucket width, solver,
-                            mode flags).
+                            violations — one jit per (bucket width, config,
+                            kkt flag).
 * :func:`null_path_step`  — the empty-optimization-set fast path.
+
+Every fitting knob lives on one :class:`~repro.core.config.FitConfig`; the
+steps take its compile-relevant slice (:class:`~repro.core.config.EngineKey`,
+a *static* pytree node — solver, backend, eps_method) as a plain argument,
+so the jit cache keys derive from one hashable object and "same engine key +
+same shapes" is exactly "same compiled code" — across fits, folds and
+estimators, even when driver-loop knobs (length, term, tol, verbosity)
+differ.
 
 The zero-column-extended design ``Xp = [X | 0]`` is built ONCE per
 :class:`PathEngine`; restricted matrices are pure on-device gathers from it.
@@ -39,6 +47,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .config import EngineKey, FitConfig
 from .kkt import kkt_check, kkt_gradient
 from .losses import Problem
 from .penalties import Penalty, restrict_penalty
@@ -63,10 +72,15 @@ def extend_design(X) -> jnp.ndarray:
     return jnp.concatenate([X, jnp.zeros((X.shape[0], 1), X.dtype)], axis=1)
 
 
-@partial(jax.jit, static_argnames=("mode", "method", "backend"))
+@partial(jax.jit, static_argnames=("mode",))
 def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
-                *, mode: str, method: str, backend: str):
-    """One fused screening pass -> (keep_groups, keep_vars, opt_mask)."""
+                key: EngineKey, *, mode: str):
+    """One fused screening pass -> (keep_groups, keep_vars, opt_mask).
+
+    ``mode`` stays a separate static because ``gap_dynamic`` re-screens with
+    the plain ``gap`` rule mid-fit under the same config.
+    """
+    method, backend = key.eps_method, key.backend
     if mode == "dfr":
         if penalty.adaptive:
             cand = dfr_screen_asgl(grad, beta, penalty, lam_k, lam_next,
@@ -84,61 +98,62 @@ def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
     return cand.keep_groups, cand.keep_vars, mask
 
 
-@partial(jax.jit, static_argnames=("width", "solver", "max_iters", "check_kkt",
-                                   "backend"))
+@partial(jax.jit, static_argnames=("width", "max_iters", "check_kkt"))
 def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
-                    step0, tol, *, width: int, solver: str, max_iters: int,
-                    check_kkt: bool, backend: str):
-    """gather -> restricted solve -> scatter -> full gradient -> KKT audit."""
+                    step0, tol, key: EngineKey, *, width: int,
+                    max_iters: int, check_kkt: bool):
+    """gather -> restricted solve -> scatter -> full gradient -> KKT audit.
+
+    ``tol`` is passed as a traced operand (not read off the static config)
+    on purpose: compiled solver variants are tolerance-agnostic, so fits at
+    different tolerances share the same bucketed compilations.
+    """
     p = prob.p
     idx_pad = jnp.nonzero(mask, size=width, fill_value=p)[0]
     Xs = Xp[:, idx_pad]                                   # O(n*width) gather
     pen_sub = restrict_penalty(penalty, mask, idx_pad, width)
     prob_sub = Problem(Xs, prob.y, prob.loss, prob.intercept)
     b0 = jnp.concatenate([beta, jnp.zeros((1,), beta.dtype)])[idx_pad]
-    res = solve(prob_sub, pen_sub, lam, beta0=b0, c0=c, solver=solver,
-                backend=backend, max_iters=max_iters, tol=tol, step0=step0)
+    res = solve(prob_sub, pen_sub, lam, beta0=b0, c0=c, config=key,
+                max_iters=max_iters, tol=tol, step0=step0)
     beta_full = jnp.zeros((p + 1,), beta.dtype).at[idx_pad].set(res.beta)[:p]
     grad, viols = kkt_check(prob, penalty, beta_full, res.intercept, lam, mask,
-                            check=check_kkt, backend=backend)
+                            check=check_kkt, backend=key.backend)
     return (beta_full, res.intercept, grad, viols, jnp.sum(viols),
             res.iters, res.converged, res.step)
 
 
-@partial(jax.jit, static_argnames=("check_kkt", "backend"))
-def null_path_step(prob: Problem, penalty: Penalty, c, lam, mask, *,
-                   check_kkt: bool, backend: str):
+@partial(jax.jit, static_argnames=("check_kkt",))
+def null_path_step(prob: Problem, penalty: Penalty, c, lam, mask,
+                   key: EngineKey, *, check_kkt: bool):
     """Empty optimization set: beta = 0, still audit the KKT conditions."""
     beta = jnp.zeros((prob.p,), prob.X.dtype)
     grad, viols = kkt_check(prob, penalty, beta, c, lam, mask,
-                            check=check_kkt, backend=backend)
+                            check=check_kkt, backend=key.backend)
     return beta, grad, viols, jnp.sum(viols)
 
 
-@partial(jax.jit, static_argnames=("backend",))
-def gradient_step(prob: Problem, beta, c, *, backend: str):
-    return kkt_gradient(prob, beta, c, backend=backend)
+@jax.jit
+def gradient_step(prob: Problem, beta, c, key: EngineKey):
+    return kkt_gradient(prob, beta, c, backend=key.backend)
 
 
 class PathEngine:
     """Per-fit state (cached extended design, warm-started step size) over the
     module-level jitted steps.  Creating many engines with equal problem
-    shapes reuses the same compiled code."""
+    shapes and equal configs reuses the same compiled code.
 
-    def __init__(self, prob: Problem, penalty: Penalty, *, solver: str = "fista",
-                 max_iters: int = 5000, tol: float = 1e-5,
-                 eps_method: str = "exact", backend: str = "jnp",
-                 bucket_min: int = 8, Xp=None):
-        if backend not in ("jnp", "pallas"):
-            raise ValueError(f"unknown backend {backend!r}")
+    Pass a :class:`FitConfig`; the pre-config keyword spelling
+    (``solver=...,max_iters=...,tol=...,eps_method=...,backend=...,
+    bucket_min=...``) still works as a shim and is folded into one.
+    """
+
+    def __init__(self, prob: Problem, penalty: Penalty,
+                 config: FitConfig = None, *, Xp=None, **legacy):
+        self.config = FitConfig.from_kwargs(config, **legacy)
+        self.key = self.config.engine_key
         self.prob = prob
         self.penalty = penalty
-        self.solver = solver
-        self.max_iters = max_iters
-        self.tol = float(tol)
-        self.eps_method = eps_method
-        self.backend = backend
-        self.bucket_min = bucket_min
         dt = prob.X.dtype
         # the ONE padded copy of X for the whole fit (or a shared one the
         # caller precomputed with extend_design)
@@ -159,26 +174,25 @@ class PathEngine:
         self.widths: set = set()
 
     def gradient(self, beta, c):
-        return gradient_step(self.prob, beta, c, backend=self.backend)
+        return gradient_step(self.prob, beta, c, self.key)
 
     def screen(self, grad, beta, lam_k, lam_next, mode: str):
         return screen_step(self.prob, self.penalty, grad, beta, lam_k, lam_next,
-                           mode=mode, method=self.eps_method,
-                           backend=self.backend)
+                           self.key, mode=mode)
 
     def step(self, mask, count: int, beta, c, lam, *, check_kkt: bool = True,
              max_iters: int = None):
-        width = bucket_width(count, self.prob.p, self.bucket_min)
+        width = bucket_width(count, self.prob.p, self.config.bucket_min)
         self.widths.add(width)
         step0 = jnp.minimum(self.step_size * self.step_regrow, 1.0)
         out = fused_path_step(
             self.prob, self.Xp, self.penalty, mask, beta, c, lam,
-            step0, self.tol, width=width, solver=self.solver,
-            max_iters=self.max_iters if max_iters is None else max_iters,
-            check_kkt=check_kkt, backend=self.backend)
+            step0, self.config.tol, self.key, width=width,
+            max_iters=self.config.max_iters if max_iters is None else max_iters,
+            check_kkt=check_kkt)
         self.step_size = out[-1]
         return out
 
     def null_step(self, c, lam, mask, check_kkt: bool = True):
         return null_path_step(self.prob, self.penalty, c, lam, mask,
-                              check_kkt=check_kkt, backend=self.backend)
+                              self.key, check_kkt=check_kkt)

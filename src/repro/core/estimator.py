@@ -1,0 +1,463 @@
+"""sklearn-style estimator layer over the DFR path engine.
+
+Three classes, re-exported from :mod:`repro.api`:
+
+* :class:`SGL`         — sparse-group lasso path: ``fit(X, y)`` /
+                         ``predict(X, lambda_=...)`` / ``score`` /
+                         ``interpolate(lambda_)`` / ``save`` / ``load``.
+* :class:`AdaptiveSGL` — the adaptive variant (PCA weights, App. B.3), same
+                         surface.
+* :class:`SGLCV`       — k-fold CV over a (lambda, alpha) grid, refit at the
+                         winner; ``predict`` defaults to ``best_lambda_``.
+
+Design: estimators own the *data policy* (dtype, standardization, adaptive
+weights, group resolution) and delegate all optimization to
+``fit_path(prob, pen, config=...)`` — one :class:`~repro.core.config.FitConfig`
+describes the whole fit and is serialized with it.  ``predict`` is a single
+jitted device-side matmul over the WHOLE coefficient path
+(:func:`predict_path`): one call scores every lambda, which is also the
+serving fast path (`repro.launch.serve_sgl`).  Coefficients are stored on
+the ORIGINAL column scale (standardization is folded back in after the
+fit), so prediction is always ``X @ coef_path_.T + intercept_path_`` with
+raw inputs, and ``save()``/``load()`` round-trips a single ``.npz`` whose
+predictions are bitwise identical to the in-process estimator's.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .adaptive import adaptive_weights
+from .config import FitConfig
+from .cv import CVResult, cv_fit_path
+from .groups import GroupInfo
+from .losses import Problem, standardize as standardize_columns
+from .path import PathDiagnostics, PathResult, fit_path
+from .penalties import Penalty
+
+_FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# device-side path prediction (the serving fast path)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("loss",))
+def predict_path(X, betas, intercepts, *, loss: str = "linear"):
+    """``[n, l]`` predictions for every lambda in one fused matmul.
+
+    Linear: the linear predictor.  Logistic: P(y=1) via sigmoid.
+    """
+    eta = X @ betas.T + intercepts[None, :]
+    if loss == "logistic":
+        return jax.nn.sigmoid(eta)
+    return eta
+
+
+def _as_group_info(groups) -> GroupInfo:
+    if isinstance(groups, GroupInfo):
+        return groups
+    if groups is None:
+        raise ValueError("groups must be given (a GroupInfo or a sequence of "
+                         "group sizes), either at construction or to fit()")
+    return GroupInfo.from_sizes(np.asarray(groups, dtype=np.int64))
+
+
+def _check_fitted(est, attr="coef_path_"):
+    if getattr(est, attr, None) is None:
+        raise RuntimeError(f"{type(est).__name__} instance is not fitted yet; "
+                           "call fit(X, y) first")
+
+
+# ---------------------------------------------------------------------------
+# SGL
+# ---------------------------------------------------------------------------
+
+class SGL:
+    """Sparse-group lasso path estimator (paper Alg. 1 + DFR screening).
+
+    Parameters
+    ----------
+    groups : GroupInfo | sequence of group sizes | None
+        Contiguous group structure; may instead be passed to ``fit``.
+    alpha : float
+        l1 weight of the penalty (Eq. 2); folded into ``config.alpha``.
+    loss : "linear" | "logistic"
+    lambdas : optional explicit lambda grid (else lambda_1 -> term*lambda_1).
+    config : FitConfig, optional
+        Full fit configuration; remaining keyword arguments are folded into
+        it, e.g. ``SGL(g, screen="sparsegl", backend="pallas", tol=1e-6)``.
+
+    Fitted attributes: ``lambdas_`` [l], ``coef_path_`` [l, p] (original
+    column scale), ``intercept_path_`` [l], ``diagnostics_``
+    (:class:`PathDiagnostics`), ``groups_``, ``n_features_in_``.
+    """
+
+    _adaptive = False
+
+    def __init__(self, groups=None, *, alpha: float = None,
+                 loss: str = "linear", lambdas=None,
+                 config: FitConfig = None, **config_kw):
+        if loss not in ("linear", "logistic"):
+            raise ValueError(f"unknown loss {loss!r}")
+        cfg = FitConfig.from_kwargs(config, **config_kw)
+        if alpha is not None:
+            cfg = cfg.replace(alpha=float(alpha))
+        if self._adaptive:
+            cfg = cfg.replace(adaptive=True)
+        self.config = cfg
+        self.groups = groups
+        self.loss = loss
+        if lambdas is not None:
+            lambdas = np.asarray(lambdas, float)
+            # the path driver warm-starts along the grid and interpolate()
+            # brackets against it — both assume glmnet order
+            if len(lambdas) > 1 and np.any(np.diff(lambdas) >= 0):
+                raise ValueError("lambdas must be strictly decreasing")
+        self.lambdas = lambdas
+        # fitted state
+        self.coef_path_ = None
+        self.intercept_path_ = None
+        self.lambdas_ = None
+        self.diagnostics_: Optional[PathDiagnostics] = None
+        self.groups_: Optional[GroupInfo] = None
+        self.n_features_in_ = None
+        self.center_ = None
+        self.scale_ = None
+        self.v_ = None               # adaptive variable weights (aSGL)
+        self.w_ = None               # adaptive group weights
+        self.fit_time_ = None
+        self._device_path = None     # (X_dtype, betas, intercepts) on device
+
+    # -- fitting ------------------------------------------------------------
+
+    @property
+    def alpha(self) -> float:
+        return self.config.alpha
+
+    def _dtype(self):
+        return jnp.float64 if self.config.dtype == "float64" else jnp.float32
+
+    def _weights(self, X, g: GroupInfo):
+        """(v, w) for the penalty; AdaptiveSGL overrides for user weights."""
+        return adaptive_weights(X, g, self.config)
+
+    def fit(self, X, y, groups=None) -> "SGL":
+        cfg = self.config
+        cfg.validate_for(self.loss, cfg.adaptive)
+        g = _as_group_info(groups if groups is not None else self.groups)
+        X = np.asarray(X)
+        y = np.asarray(y)
+        if X.ndim != 2 or X.shape[1] != g.p:
+            raise ValueError(f"X must be [n, {g.p}] for these groups, "
+                             f"got {X.shape}")
+        dt = self._dtype()
+        if cfg.standardize:
+            Xf, center, scale = standardize_columns(X, return_stats=True)
+        else:
+            center = scale = None
+            Xf = X
+        prob = Problem(jnp.asarray(Xf, dt), jnp.asarray(y, dt), self.loss,
+                       cfg.fit_intercept)
+        v, w = self._weights(prob.X, g)
+        pen = Penalty(g, cfg.alpha, v, w)
+        res: PathResult = fit_path(prob, pen, lambdas=self.lambdas, config=cfg)
+
+        betas = res.betas
+        intercepts = res.intercepts
+        if cfg.standardize:
+            # fold the column transform back: the saved path predicts from
+            # RAW inputs via a plain matmul
+            betas = betas / scale[None, :].astype(betas.dtype)
+            intercepts = (intercepts - betas @ center.astype(betas.dtype))
+        self.coef_path_ = betas
+        self.intercept_path_ = np.asarray(intercepts)
+        self.lambdas_ = np.asarray(res.lambdas)
+        self.diagnostics_ = res.metrics
+        self.groups_ = g
+        self.n_features_in_ = int(g.p)
+        self.center_ = None if center is None else np.asarray(center)
+        self.scale_ = None if scale is None else np.asarray(scale)
+        self.v_ = None if v is None else np.asarray(v)
+        self.w_ = None if w is None else np.asarray(w)
+        self.fit_time_ = res.total_time
+        self._device_path = None
+        return self
+
+    # -- prediction ---------------------------------------------------------
+
+    def _path_on_device(self):
+        if self._device_path is None:
+            dt = self._dtype()
+            self._device_path = (jnp.asarray(self.coef_path_, dt),
+                                 jnp.asarray(self.intercept_path_, dt))
+        return self._device_path
+
+    def interpolate(self, lambda_: float):
+        """(beta [p], intercept) at ``lambda_``: exact on grid points, else
+        linear interpolation in log(lambda) between the bracketing path
+        points (clipped to the fitted range)."""
+        _check_fitted(self)
+        lams = self.lambdas_                       # descending
+        if len(lams) == 1:
+            return self.coef_path_[0], float(self.intercept_path_[0])
+        lam = float(np.clip(lambda_, lams.min(), lams.max()))
+        # searchsorted needs ascending: work on the reversed grid
+        asc = lams[::-1]
+        j = int(np.searchsorted(asc, lam))
+        j = min(max(j, 1), len(asc) - 1)
+        lo, hi = asc[j - 1], asc[j]
+        t = 0.0 if hi == lo else (np.log(lam) - np.log(lo)) / \
+            (np.log(hi) - np.log(lo))
+        ilo, ihi = len(lams) - j, len(lams) - 1 - j
+        beta = (1 - t) * self.coef_path_[ilo] + t * self.coef_path_[ihi]
+        c = (1 - t) * self.intercept_path_[ilo] + t * self.intercept_path_[ihi]
+        return beta, float(c)
+
+    def predict(self, X, lambda_: float = None) -> np.ndarray:
+        """Predictions from the fitted path (device-side matmul).
+
+        ``lambda_=None`` scores the WHOLE path in one call -> ``[n, l]``;
+        a float ``lambda_`` interpolates the path there -> ``[n]``.
+        Logistic fits return probabilities P(y=1).
+        """
+        _check_fitted(self)
+        dt = self._dtype()
+        Xd = jnp.asarray(np.asarray(X), dt)
+        if lambda_ is None:
+            betas, intercepts = self._path_on_device()
+        else:
+            beta, c = self.interpolate(lambda_)
+            betas = jnp.asarray(beta[None, :], dt)
+            intercepts = jnp.asarray(np.asarray([c]), dt)
+        out = predict_path(Xd, betas, intercepts, loss=self.loss)
+        out = np.asarray(out)
+        return out[:, 0] if lambda_ is not None else out
+
+    def score(self, X, y, lambda_: float = None):
+        """R^2 (linear) or accuracy (logistic).  ``lambda_=None`` scores the
+        whole path -> ``[l]``; a float scores one point -> scalar."""
+        _check_fitted(self)
+        y = np.asarray(y)
+        pred = self.predict(X, lambda_)
+        if pred.ndim == 1:
+            pred = pred[:, None]
+        if self.loss == "linear":
+            ss_res = np.sum((y[:, None] - pred) ** 2, axis=0)
+            ss_tot = np.sum((y - y.mean()) ** 2)
+            s = 1.0 - ss_res / np.maximum(ss_tot, np.finfo(float).tiny)
+        else:
+            s = np.mean((pred >= 0.5) == (y[:, None] >= 0.5), axis=0)
+        return float(s[0]) if lambda_ is not None else s
+
+    @property
+    def coef_(self) -> np.ndarray:
+        """Coefficients at the LAST (smallest-lambda) path point."""
+        _check_fitted(self)
+        return self.coef_path_[-1]
+
+    @property
+    def intercept_(self) -> float:
+        _check_fitted(self)
+        return float(self.intercept_path_[-1])
+
+    # -- serialization ------------------------------------------------------
+
+    def _save_arrays(self) -> dict:
+        _check_fitted(self)
+        d = dict(
+            format_version=np.int64(_FORMAT_VERSION),
+            class_name=np.str_(type(self).__name__),
+            config_json=np.str_(self.config.to_json()),
+            loss=np.str_(self.loss),
+            group_sizes=np.asarray(self.groups_.sizes),
+            lambdas=self.lambdas_,
+            coef_path=self.coef_path_,
+            intercept_path=self.intercept_path_,
+        )
+        for k in ("center_", "scale_", "v_", "w_"):
+            val = getattr(self, k)
+            if val is not None:
+                d[k.rstrip("_")] = val
+        for f in PathDiagnostics.__dataclass_fields__:
+            d[f"diag_{f}"] = getattr(self.diagnostics_, f)
+        return d
+
+    def save(self, path) -> None:
+        """Serialize the fitted state to a single ``.npz`` (no pickle).
+
+        ``load(path).predict(X)`` is bitwise identical to ``self.predict(X)``
+        in a fresh process — a fitted path can be shipped to a serving
+        container (`repro.launch.serve_sgl`) without refitting.
+        """
+        np.savez(path, **self._save_arrays())
+
+    def _restore_arrays(self, d) -> None:
+        self.lambdas_ = d["lambdas"]
+        self.coef_path_ = d["coef_path"]
+        self.intercept_path_ = d["intercept_path"]
+        self.groups_ = GroupInfo.from_sizes(d["group_sizes"])
+        self.n_features_in_ = int(self.groups_.p)
+        self.groups = self.groups_
+        for k in ("center", "scale", "v", "w"):
+            setattr(self, k + "_", d[k] if k in d else None)
+        diag = {f: d[f"diag_{f}"] for f in PathDiagnostics.__dataclass_fields__}
+        self.diagnostics_ = PathDiagnostics(**diag)
+        self._device_path = None
+
+    @classmethod
+    def load(cls, path) -> "SGL":
+        """Reconstruct a fitted estimator (SGL / AdaptiveSGL / SGLCV) from
+        ``save()`` output.  Dispatches on the saved class name, so
+        ``SGL.load`` works for any of the three."""
+        with np.load(path, allow_pickle=False) as f:
+            d = {k: f[k] for k in f.files}
+        name = str(d["class_name"][()])
+        klass = _CLASSES[name]
+        cfg = FitConfig.from_json(str(d["config_json"][()]))
+        est = klass.__new__(klass)
+        SGL.__init__(est, config=cfg, loss=str(d["loss"][()]))
+        est._restore_arrays(d)
+        if name == "SGLCV":
+            est._restore_cv(d)
+        return est
+
+
+class AdaptiveSGL(SGL):
+    """Adaptive sparse-group lasso (paper Sec. 5): PCA-derived weights
+    ``v_i = |q1_i|^-gamma1``, ``w_g = ||q1^(g)||^-gamma2`` by default, or
+    explicit user ``weights=(v, w)``."""
+
+    _adaptive = True
+
+    def __init__(self, groups=None, *, alpha: float = None,
+                 loss: str = "linear", lambdas=None, gamma1: float = None,
+                 gamma2: float = None, weights=None,
+                 config: FitConfig = None, **config_kw):
+        if gamma1 is not None:
+            config_kw["gamma1"] = float(gamma1)
+        if gamma2 is not None:
+            config_kw["gamma2"] = float(gamma2)
+        super().__init__(groups, alpha=alpha, loss=loss, lambdas=lambdas,
+                         config=config, **config_kw)
+        self.weights = weights
+
+    def _weights(self, X, g: GroupInfo):
+        if getattr(self, "weights", None) is not None:
+            v, w = self.weights
+            return jnp.asarray(v, X.dtype), jnp.asarray(w, X.dtype)
+        return adaptive_weights(X, g, self.config)
+
+
+# ---------------------------------------------------------------------------
+# SGLCV
+# ---------------------------------------------------------------------------
+
+class SGLCV(SGL):
+    """K-fold CV over a (lambda, alpha) grid, then a full-data refit at the
+    winning alpha (its full-data lambda path is re-used as the refit grid, so
+    ``best_lambda_`` is ON the fitted path).
+
+    ``predict``/``score`` default to ``best_lambda_`` instead of the whole
+    path; pass an explicit ``lambda_`` (or use ``predict_full_path``) for
+    path-level output.
+    """
+
+    def __init__(self, groups=None, *, alphas: Sequence[float] = (0.95,),
+                 folds: int = 5, loss: str = "linear", shuffle_seed=None,
+                 config: FitConfig = None, **config_kw):
+        config_kw.setdefault("length", 20)      # cv default grid length
+        super().__init__(groups, alpha=float(alphas[0]), loss=loss,
+                         config=config, **config_kw)
+        self.alphas = tuple(float(a) for a in alphas)
+        self.folds = int(folds)
+        self.shuffle_seed = shuffle_seed
+        self.cv_result_: Optional[CVResult] = None
+        self.best_alpha_ = None
+        self.best_lambda_ = None
+
+    def fit(self, X, y, groups=None) -> "SGLCV":
+        cfg = self.config
+        cfg.validate_for(self.loss, cfg.adaptive)
+        g = _as_group_info(groups if groups is not None else self.groups)
+        X = np.asarray(X)
+        y = np.asarray(y)
+        # cv_fit_path reads standardize/fit_intercept off the config itself
+        # (its full-data column stats match the refit's, below)
+        cv = cv_fit_path(X, y, g, alphas=self.alphas, loss=self.loss,
+                         folds=self.folds, config=cfg,
+                         shuffle_seed=self.shuffle_seed)
+        ai, li = cv.best_index
+        self.cv_result_ = cv
+        self.best_alpha_ = float(cv.alphas[ai])
+        self.best_lambda_ = float(cv.lambdas[ai, li])
+        # refit on all data at the winning alpha, on the SAME lambda grid
+        self.config = cfg.replace(alpha=self.best_alpha_)
+        self.lambdas = cv.lambdas[ai]
+        super().fit(X, y, groups=g)
+        return self
+
+    def predict(self, X, lambda_: float = None) -> np.ndarray:
+        """Predictions at ``best_lambda_`` by default -> ``[n]``."""
+        _check_fitted(self)
+        return super().predict(X, self.best_lambda_ if lambda_ is None
+                               else lambda_)
+
+    def predict_full_path(self, X) -> np.ndarray:
+        """``[n, l]`` predictions over the refit path (all lambdas)."""
+        return SGL.predict(self, X, None)
+
+    def score(self, X, y, lambda_: float = None):
+        return super().score(X, y, self.best_lambda_ if lambda_ is None
+                             else lambda_)
+
+    @property
+    def coef_(self) -> np.ndarray:
+        """Coefficients at ``best_lambda_``."""
+        _check_fitted(self)
+        return self.interpolate(self.best_lambda_)[0]
+
+    @property
+    def intercept_(self) -> float:
+        _check_fitted(self)
+        return self.interpolate(self.best_lambda_)[1]
+
+    # -- serialization ------------------------------------------------------
+
+    def _save_arrays(self) -> dict:
+        d = super()._save_arrays()
+        cv = self.cv_result_
+        d.update(cv_alphas=cv.alphas, cv_lambdas=cv.lambdas,
+                 cv_error=cv.cv_error, cv_se=cv.cv_se,
+                 cv_fit_time=np.float64(cv.fit_time),
+                 best_alpha=np.float64(self.best_alpha_),
+                 best_lambda=np.float64(self.best_lambda_),
+                 folds=np.int64(self.folds))
+        return d
+
+    def _restore_cv(self, d) -> None:
+        ce = d["cv_error"]
+        ai, li = np.unravel_index(np.argmin(ce), ce.shape)
+        self.alphas = tuple(float(a) for a in d["cv_alphas"])
+        self.folds = int(d["folds"][()])
+        self.shuffle_seed = None
+        self.cv_result_ = CVResult(
+            d["cv_alphas"], d["cv_lambdas"], ce, d["cv_se"],
+            best_alpha=float(d["cv_alphas"][ai]),
+            best_lambda=float(d["cv_lambdas"][ai, li]),
+            best_error=float(ce[ai, li]),
+            fit_time=float(d["cv_fit_time"][()]))
+        self.best_alpha_ = float(d["best_alpha"][()])
+        self.best_lambda_ = float(d["best_lambda"][()])
+
+
+_CLASSES = {"SGL": SGL, "AdaptiveSGL": AdaptiveSGL, "SGLCV": SGLCV}
+
+
+def load(path) -> SGL:
+    """Load any saved estimator (``SGL.save`` output) from a ``.npz``."""
+    return SGL.load(path)

@@ -112,11 +112,22 @@ def lipschitz(prob: Problem, iters: int = 30, key=None) -> float:
     return L
 
 
-def standardize(X, l2: bool = True):
-    """Center columns and scale to unit l2 norm (paper Table A1: 'l2')."""
-    X = X - X.mean(axis=0, keepdims=True)
+def standardize(X, l2: bool = True, return_stats: bool = False):
+    """Center columns and scale to unit l2 norm (paper Table A1: 'l2').
+
+    ``return_stats=True`` also returns (center [p], scale [p]) so callers
+    (the estimator layer) can fold the transform back into coefficients;
+    this is the ONE standardization implementation — CV and refit must
+    share it or they silently solve differently-scaled problems.
+    """
+    c = np.asarray(X).mean(axis=0)
+    X = X - c
     if l2:
         s = np.linalg.norm(np.asarray(X), axis=0)
         s = np.where(s > 0, s, 1.0)
         X = X / s
+    else:
+        s = np.ones_like(c)
+    if return_stats:
+        return X, c, s
     return X

@@ -10,12 +10,21 @@ restricted solve, and the KKT-violation audit run as a single fused jitted
 step per (mode, bucket).  Host syncs per path point: the bucket-width
 decision (one int) plus one violation count per KKT round.
 
-Modes:
-  * ``screen="dfr"``      — the paper: bi-level strong rule + KKT loop
-  * ``screen="sparsegl"`` — group-only strong rule + KKT loop
-  * ``screen="gap"``      — sequential GAP-safe (exact; no KKT loop needed)
-  * ``screen="gap_dynamic"`` — GAP-safe re-applied during the solve
-  * ``screen=None``       — no screening (baseline)
+Configuration lives on one :class:`~repro.core.config.FitConfig` (a static
+pytree node — the engine's compile-cache keys derive from its hash):
+
+    fit_path(prob, pen, config=FitConfig(screen="dfr", backend="pallas"))
+
+The pre-config keyword spelling (``fit_path(prob, pen, screen=..., tol=...)``)
+is kept as a thin shim over ``FitConfig.from_kwargs`` — prefer ``config=``
+(and the estimator layer in :mod:`repro.api`) in new code.
+
+Modes (``FitConfig.screen``):
+  * ``"dfr"``        — the paper: bi-level strong rule + KKT loop
+  * ``"sparsegl"``   — group-only strong rule + KKT loop
+  * ``"gap"``        — sequential GAP-safe (exact; no KKT loop needed)
+  * ``"gap_dynamic"``— GAP-safe re-applied during the solve
+  * ``None``         — no screening (baseline)
 
 ``backend="pallas"`` routes the gradient, the group screening statistics and
 the solver prox through the Pallas kernels (``kernels/ops.py``); off-TPU the
@@ -28,13 +37,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .adaptive import asgl_path_start
+from .config import FitConfig
 from .engine import PathEngine
 from .groups import GroupInfo
 from .losses import Problem, gradient, residual
@@ -77,18 +87,89 @@ def lambda_path(lam1, length: int = 50, term: float = 0.1) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# results container
+# diagnostics + results containers
 # ---------------------------------------------------------------------------
+
+_DIAG_FIELDS = ("active_g", "cand_g", "opt_g", "active_v", "cand_v", "opt_v",
+                "kkt_viols", "iters", "converged", "opt_prop_v", "opt_prop_g")
+
+
+@dataclasses.dataclass(frozen=True)
+class PathDiagnostics:
+    """Typed per-path-point statistics (one numpy array entry per lambda).
+
+    Replaces the old dict-of-lists ``PathResult.metrics``; ``diag[key]``
+    still works (returning a plain list) so pre-existing benchmark scripts
+    and notebooks keep running unchanged.
+    """
+
+    active_g: np.ndarray        # [l] int   — groups with a nonzero coefficient
+    cand_g: np.ndarray          # [l] int   — groups kept by the screen rule
+    opt_g: np.ndarray           # [l] int   — groups in the optimization set
+    active_v: np.ndarray        # [l] int   — nonzero coefficients
+    cand_v: np.ndarray          # [l] int   — variables kept by the screen rule
+    opt_v: np.ndarray           # [l] int   — optimization-set size
+    kkt_viols: np.ndarray       # [l] int   — KKT violations re-entered
+    iters: np.ndarray           # [l] int   — final restricted-solve iterations
+    converged: np.ndarray       # [l] bool
+    opt_prop_v: np.ndarray      # [l] float — |O_v| / p (the paper's "input prop")
+    opt_prop_g: np.ndarray      # [l] float — |O_g| / m
+
+    @classmethod
+    def from_lists(cls, d: dict) -> "PathDiagnostics":
+        kinds = {"converged": bool, "opt_prop_v": np.float64,
+                 "opt_prop_g": np.float64}
+        return cls(**{k: np.asarray(d[k], dtype=kinds.get(k, np.int64))
+                      for k in _DIAG_FIELDS})
+
+    # -- dict-of-lists backward compatibility -------------------------------
+    def __getitem__(self, key: str) -> list:
+        if key not in _DIAG_FIELDS:
+            raise KeyError(key)
+        return getattr(self, key).tolist()
+
+    def __contains__(self, key) -> bool:
+        return key in _DIAG_FIELDS
+
+    def keys(self):
+        return _DIAG_FIELDS
+
+    def __len__(self) -> int:
+        return len(self.active_v)
+
+    def summary(self) -> str:
+        """One line: screening effectiveness + solver effort over the path."""
+        n = len(self)
+        if n == 0:
+            return "PathDiagnostics: empty path"
+        return (f"PathDiagnostics: {n} points | input prop "
+                f"{self.opt_prop_v.mean():.3f} (vars) / "
+                f"{self.opt_prop_g.mean():.3f} (groups) | "
+                f"{int(self.kkt_viols.sum())} KKT viols | "
+                f"{int(self.iters.sum())} solver iters | "
+                f"{int(self.converged.sum())}/{n} converged | "
+                f"final active {int(self.active_v[-1])} vars in "
+                f"{int(self.active_g[-1])} groups")
+
 
 @dataclasses.dataclass
 class PathResult:
     lambdas: np.ndarray              # [l]
     betas: np.ndarray                # [l, p]
     intercepts: np.ndarray           # [l]
-    metrics: dict                    # lists of per-point stats
+    metrics: Union[PathDiagnostics, dict]   # dicts normalized in __post_init__
     screen_time: float
     solve_time: float
     buckets: tuple = ()              # solver bucket widths compiled for this fit
+
+    def __post_init__(self):
+        # the pinned seed driver (path_reference) still builds dict-of-lists
+        if isinstance(self.metrics, dict):
+            self.metrics = PathDiagnostics.from_lists(self.metrics)
+
+    @property
+    def diagnostics(self) -> PathDiagnostics:
+        return self.metrics
 
     @property
     def total_time(self):
@@ -96,9 +177,7 @@ class PathResult:
 
 
 def _metrics_init():
-    return {k: [] for k in ("active_g", "cand_g", "opt_g", "active_v", "cand_v",
-                            "opt_v", "kkt_viols", "iters", "converged",
-                            "opt_prop_v", "opt_prop_g")}
+    return {k: [] for k in _DIAG_FIELDS}
 
 
 def _record(metrics, g: GroupInfo, beta, cand: Optional[ScreenResult], opt_mask,
@@ -127,28 +206,40 @@ def _record(metrics, g: GroupInfo, beta, cand: Optional[ScreenResult], opt_mask,
 # the driver
 # ---------------------------------------------------------------------------
 
-_SCREEN_MODES = (None, "dfr", "sparsegl", "gap", "gap_dynamic")
+_UNSET = object()
 
 
-def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *, screen="dfr",
-             solver: str = "fista", length: int = 50, term: float = 0.1,
-             max_iters: int = 5000, tol: float = 1e-5, kkt_max_rounds: int = 20,
-             eps_method: str = "exact", dynamic_every: int = 25,
-             verbose: bool = False, backend: str = "jnp", Xp=None) -> PathResult:
-    if screen not in _SCREEN_MODES:
-        raise ValueError(f"unknown screen mode {screen!r}")
-    if screen in ("gap", "gap_dynamic") and (prob.loss != "linear" or penalty.adaptive):
-        raise ValueError("GAP-safe implemented for linear SGL only")
+def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
+             config: FitConfig = None, screen=_UNSET, solver: str = None,
+             length: int = None, term: float = None, max_iters: int = None,
+             tol: float = None, kkt_max_rounds: int = None,
+             eps_method: str = None, dynamic_every: int = None,
+             verbose: bool = None, backend: str = None, Xp=None) -> PathResult:
+    """Fit the SGL/aSGL lambda path.
+
+    Prefer ``config=FitConfig(...)``; the individual keyword arguments are
+    the pre-config spelling, kept as a shim (they override the matching
+    ``config`` fields when both are given).  ``penalty`` is authoritative for
+    the mixing weight — ``config.alpha`` is an estimator-layer convenience
+    and is not consulted here.
+    """
+    legacy = dict(solver=solver, length=length, term=term, max_iters=max_iters,
+                  tol=tol, kkt_max_rounds=kkt_max_rounds, eps_method=eps_method,
+                  dynamic_every=dynamic_every, verbose=verbose, backend=backend)
+    if screen is not _UNSET:
+        legacy["screen"] = screen
+    cfg = FitConfig.from_kwargs(config, **legacy)
+    cfg.validate_for(prob.loss, penalty.adaptive)
+
     user_grid = lambdas is not None
     if not user_grid:
-        lam1 = float(path_start(prob, penalty, method=eps_method))
-        lambdas = lambda_path(lam1, length, term)
+        lam1 = float(path_start(prob, penalty, method=cfg.eps_method))
+        lambdas = lambda_path(lam1, cfg.length, cfg.term)
     lambdas = np.asarray(lambdas, dtype=np.float64)
     l = len(lambdas)
     p = prob.p
 
-    engine = PathEngine(prob, penalty, solver=solver, max_iters=max_iters,
-                        tol=tol, eps_method=eps_method, backend=backend, Xp=Xp)
+    engine = PathEngine(prob, penalty, cfg, Xp=Xp)
 
     betas = np.zeros((l, p), dtype=prob.X.dtype)
     intercepts = np.zeros((l,), dtype=prob.X.dtype)
@@ -160,7 +251,7 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *, screen="dfr",
     c = null_intercept(prob)
     grad = engine.gradient(beta, c)
     full_mask = jnp.ones((p,), bool)
-    check_kkt = screen not in (None, "gap")   # exact / full: no violations possible
+    check_kkt = cfg.check_kkt           # exact / full: no violations possible
 
     if user_grid:
         # lambdas[0] need not be this problem's lambda_1 (e.g. a CV fold
@@ -180,10 +271,11 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *, screen="dfr",
         # ---- screening --------------------------------------------------
         t0 = time.perf_counter()
         cand = None
-        if screen is None:
+        if cfg.screen is None:
             mask, count = full_mask, p
         else:
-            keep_g, keep_v, mask = engine.screen(grad, beta, lam_k, lam, screen)
+            keep_g, keep_v, mask = engine.screen(grad, beta, lam_k, lam,
+                                                 cfg.screen)
             cand = ScreenResult(keep_g, keep_v)
             count = int(jnp.sum(mask))        # the one bucket-decision sync
         t_screen += time.perf_counter() - t0
@@ -203,14 +295,14 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *, screen="dfr",
             nv = int(nv)                      # one sync per KKT round
             total_viols += nv
             rounds += 1
-            if nv == 0 or rounds >= kkt_max_rounds:
+            if nv == 0 or rounds >= cfg.kkt_max_rounds:
                 break
             mask = mask | viols               # violators re-enter O_v
             count += nv
 
         # dynamic GAP-safe: re-screen with the *current* primal point and
         # re-solve on the (only ever shrinking) safe set
-        if screen == "gap_dynamic":
+        if cfg.screen == "gap_dynamic":
             for _ in range(3):
                 _, keep_v2, _ = engine.screen(grad, beta, lam, lam, "gap")
                 new_mask = (keep_v2 & mask) | (beta != 0)
@@ -221,7 +313,7 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *, screen="dfr",
                 (beta, c, grad, viols, nv, res_iters,
                  res_conv, _) = engine.step(mask, max(count, 1), beta, c, lam,
                                             check_kkt=False,
-                                            max_iters=dynamic_every)
+                                            max_iters=cfg.dynamic_every)
 
         jax.block_until_ready(beta)
         t_solve += time.perf_counter() - t0
@@ -230,7 +322,7 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *, screen="dfr",
         intercepts[k] = float(c)
         _record(metrics, penalty.g, betas[k], cand, np.asarray(mask), total_viols,
                 res_iters, res_conv)
-        if verbose:
+        if cfg.verbose:
             print(f"[path {k:3d}/{l}] lam={lam:.4g} |O_v|={count} "
                   f"iters={int(res_iters)} viols={total_viols}")
 

@@ -145,6 +145,8 @@ class Penalty:
     def __init__(self, g: GroupInfo, alpha: float, v=None, w=None):
         self.g = g
         self.alpha = float(alpha)
+        if not 0.0 <= self.alpha <= 1.0:
+            raise ValueError(f"Penalty: alpha must be in [0, 1], got {alpha}")
         self.v = v
         self.w = w
 

@@ -207,7 +207,19 @@ SOLVERS = {"fista": fista, "atos": atos}
 
 
 def solve(prob: Problem, penalty: Penalty, lam, beta0=None, c0=0.0,
-          solver: str = "fista", backend: str = "jnp", **kw) -> SolveResult:
+          solver: str = "fista", backend: str = "jnp", config=None,
+          **kw) -> SolveResult:
+    """Dispatch to a solver.  ``config`` — a
+    :class:`~repro.core.config.FitConfig` or its
+    :class:`~repro.core.config.EngineKey` slice (what the engine passes) —
+    supplies solver/backend (and, for a full FitConfig, tol/max_iters
+    defaults) in one object; explicit keyword overrides (e.g. the path
+    driver's ``dynamic_every`` iteration cap) win."""
+    if config is not None:
+        solver, backend = config.solver, config.backend
+        for k in ("tol", "max_iters"):
+            if k not in kw and hasattr(config, k):
+                kw[k] = getattr(config, k)
     if beta0 is None:
         beta0 = jnp.zeros((prob.p,), prob.X.dtype)
     if backend != "jnp":

@@ -1,0 +1,91 @@
+"""CV fold construction (tail-row coverage) and FitConfig-driven cv_fit_path."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import FitConfig, GroupInfo, cv_fit_path, kfold_indices
+
+
+def test_kfold_all_rows_validated_when_divisible():
+    n, folds = 60, 5
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")            # must NOT warn
+        splits = kfold_indices(n, folds)
+    seen = np.concatenate([val for _, val in splits])
+    assert np.array_equal(np.sort(seen), np.arange(n))   # every row scored once
+    assert len(np.unique(seen)) == n
+    for train, val in splits:
+        assert len(train) == n - n // folds              # equal train shapes
+        assert len(np.intersect1d(train, val)) == 0
+
+
+def test_kfold_warns_on_remainder_rows():
+    n, folds = 62, 5
+    with pytest.warns(UserWarning, match="never\\s+validated"):
+        splits = kfold_indices(n, folds)
+    seen = np.concatenate([val for _, val in splits])
+    # the documented behavior: the tail rows stay in every training set
+    tail = np.arange((n // folds) * folds, n)
+    assert len(np.intersect1d(seen, tail)) == 0
+    for train, _ in splits:
+        assert np.all(np.isin(tail, train))
+
+
+def test_kfold_rejects_folds_gt_n():
+    with pytest.raises(ValueError):
+        kfold_indices(3, 5)
+
+
+def _synth(seed=0, n=60, p=96, m=8):
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([p // m] * m)
+    X = rng.normal(size=(n, p))
+    X = (X - X.mean(0)) / np.linalg.norm(X - X.mean(0), axis=0)
+    beta = np.zeros(p)
+    beta[:4] = rng.normal(0, 2, 4)
+    y = X @ beta + 0.4 * rng.normal(size=n)
+    return X, y, g
+
+
+def test_cv_fit_path_config_matches_legacy_kwargs():
+    X, y, g = _synth()
+    kw = dict(alphas=(0.95,), folds=3)
+    r_legacy = cv_fit_path(X, y, g, length=5, term=0.3, screen="dfr", **kw)
+    r_cfg = cv_fit_path(X, y, g, config=FitConfig(length=5, term=0.3,
+                                                  screen="dfr"), **kw)
+    assert np.array_equal(r_legacy.cv_error, r_cfg.cv_error)
+    assert r_legacy.best_lambda == r_cfg.best_lambda
+
+
+def test_cv_fit_path_honors_config_fit_intercept():
+    X, y, g = _synth(seed=2)
+    yo = y + 3.0                       # offset makes the intercept matter
+    cfg = FitConfig(length=4, term=0.3)
+    r_cfg = cv_fit_path(X, yo, g, alphas=(0.95,), folds=3,
+                        config=cfg.replace(fit_intercept=False))
+    r_kw = cv_fit_path(X, yo, g, alphas=(0.95,), folds=3, intercept=False,
+                       config=cfg)
+    assert np.array_equal(r_cfg.cv_error, r_kw.cv_error)
+    r_with = cv_fit_path(X, yo, g, alphas=(0.95,), folds=3, config=cfg)
+    assert not np.array_equal(r_cfg.cv_error, r_with.cv_error)
+
+
+def test_cv_fit_path_honors_config_standardize():
+    rng = np.random.default_rng(4)
+    X, y, g = _synth(seed=4)
+    Xs = X * rng.uniform(0.5, 20.0, X.shape[1])[None, :]
+    cfg = FitConfig(length=4, term=0.3)
+    r_std = cv_fit_path(Xs, y, g, alphas=(0.95,), folds=3,
+                        config=cfg.replace(standardize=True))
+    assert np.all(np.isfinite(r_std.cv_error))
+    r_raw = cv_fit_path(Xs, y, g, alphas=(0.95,), folds=3, config=cfg)
+    assert not np.array_equal(r_std.cv_error, r_raw.cv_error)
+
+
+def test_cv_fit_path_adaptive_uses_config_gammas():
+    X, y, g = _synth(seed=1)
+    r = cv_fit_path(X, y, g, alphas=(0.95,), folds=3,
+                    config=FitConfig(length=4, term=0.3, adaptive=True,
+                                     gamma1=0.3, gamma2=0.3))
+    assert np.all(np.isfinite(r.cv_error))

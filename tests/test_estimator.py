@@ -1,0 +1,302 @@
+"""Estimator-layer API: FitConfig validation/statics, SGL/AdaptiveSGL/SGLCV
+fit/predict/score/interpolate, save()/load() round-trips, and the legacy
+fit_path shim."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (SGL, AdaptiveSGL, SGLCV, FitConfig, GroupInfo, Penalty,
+                       Problem, fit_path, load)
+from repro.core.config import EngineKey
+
+
+def synth(seed=0, n=60, p=120, m=12, loss="linear"):
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([p // m] * m)
+    X = rng.normal(size=(n, p))
+    X = X - X.mean(axis=0)
+    X = X / np.linalg.norm(X, axis=0)
+    beta = np.zeros(p)
+    for gi in rng.choice(m, 3, replace=False):
+        s = gi * (p // m)
+        beta[s:s + 3] = rng.normal(0, 2.0, 3)
+    eta = X @ beta
+    if loss == "linear":
+        y = eta + 0.4 * rng.normal(size=n)
+    else:
+        y = (rng.uniform(size=n) < 1 / (1 + np.exp(-eta))).astype(float)
+    return X, y, g
+
+
+# ---------------------------------------------------------------------------
+# FitConfig
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(screen="bogus"),
+    dict(alpha=1.5),
+    dict(alpha=-0.1),
+    dict(tol=-1e-5),
+    dict(tol=0.0),
+    dict(solver="lbfgs"),
+    dict(backend="tpu"),
+    dict(term=0.0),
+    dict(term=1.5),
+    dict(length=0),
+    dict(eps_method="newton"),
+    dict(dtype="float16"),
+    dict(gamma1=-1.0),
+    dict(backend="pallas", solver="atos"),
+])
+def test_fitconfig_validation_errors(bad):
+    with pytest.raises(ValueError):
+        FitConfig(**bad)
+
+
+def test_fitconfig_is_static_and_hashable():
+    a, b = FitConfig(), FitConfig()
+    assert a == b and hash(a) == hash(b)
+    assert a.replace(tol=1e-6) != a
+    # zero-leaf pytree: usable directly as a jit static
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    assert leaves == []
+    assert jax.tree_util.tree_unflatten(treedef, []) == a
+
+
+def test_fitconfig_engine_key_excludes_driver_knobs():
+    """Fits differing only in driver-loop knobs share compiled code."""
+    a = FitConfig(length=10, term=0.3, tol=1e-6, verbose=True)
+    b = FitConfig(length=50, term=0.1, tol=1e-4)
+    assert a.engine_key == b.engine_key == EngineKey("fista", "jnp", "exact")
+    assert FitConfig(solver="atos").engine_key != a.engine_key
+
+
+def test_fitconfig_json_roundtrip():
+    cfg = FitConfig(screen="sparsegl", alpha=0.5, tol=1e-6, adaptive=True,
+                    gamma1=0.2, standardize=True, dtype="float32")
+    assert FitConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_fitconfig_from_kwargs_shim():
+    base = FitConfig(tol=1e-6)
+    assert FitConfig.from_kwargs(base) is base
+    assert FitConfig.from_kwargs(base, screen=None).screen is None
+    assert FitConfig.from_kwargs(base, length=7).tol == 1e-6
+    with pytest.raises(TypeError):
+        FitConfig.from_kwargs(base, not_a_knob=1)
+
+
+def test_penalty_alpha_validation():
+    g = GroupInfo.from_sizes([4, 4])
+    with pytest.raises(ValueError):
+        Penalty(g, 1.2)
+
+
+def test_fit_path_legacy_shim_matches_config():
+    X, y, g = synth()
+    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32))
+    pen = Penalty(g, 0.95)
+    r_legacy = fit_path(prob, pen, screen="dfr", length=6, term=0.3, tol=1e-6)
+    r_cfg = fit_path(prob, pen,
+                     config=FitConfig(screen="dfr", length=6, term=0.3,
+                                      tol=1e-6))
+    assert np.array_equal(r_legacy.betas, r_cfg.betas)
+    assert np.array_equal(r_legacy.intercepts, r_cfg.intercepts)
+
+
+# ---------------------------------------------------------------------------
+# PathDiagnostics
+# ---------------------------------------------------------------------------
+
+def test_path_diagnostics_typed_and_backcompat():
+    X, y, g = synth()
+    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32))
+    r = fit_path(prob, Penalty(g, 0.95), length=6, term=0.3)
+    d = r.metrics
+    assert isinstance(d.active_v, np.ndarray) and d.active_v.shape == (6,)
+    assert d.converged.dtype == bool
+    assert isinstance(d["opt_prop_v"], list)       # dict-of-lists compat
+    assert d["active_v"] == d.active_v.tolist()
+    assert "kkt_viols" in d and "nope" not in d
+    with pytest.raises(KeyError):
+        d["nope"]
+    assert len(d) == 6
+    s = d.summary()
+    assert "6 points" in s and "input prop" in s
+
+
+# ---------------------------------------------------------------------------
+# SGL: fit / predict / score / interpolate
+# ---------------------------------------------------------------------------
+
+def test_sgl_matches_fit_path():
+    X, y, g = synth()
+    est = SGL(g, alpha=0.95, length=6, term=0.3).fit(X, y)
+    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32))
+    r = fit_path(prob, Penalty(g, 0.95), length=6, term=0.3)
+    assert np.array_equal(est.coef_path_, r.betas)
+    assert np.array_equal(est.lambdas_, r.lambdas)
+
+
+@pytest.mark.parametrize("loss", ["linear", "logistic"])
+def test_predict_matches_manual_matmul(loss):
+    X, y, g = synth(loss=loss)
+    est = SGL(g, loss=loss, length=6, term=0.3).fit(X, y)
+    pred = est.predict(X)
+    assert pred.shape == (len(y), 6)
+    eta = X.astype(np.float32) @ est.coef_path_.T + est.intercept_path_[None, :]
+    want = 1 / (1 + np.exp(-eta)) if loss == "logistic" else eta
+    np.testing.assert_allclose(pred, want, atol=1e-5)
+    if loss == "logistic":
+        assert pred.min() >= 0.0 and pred.max() <= 1.0   # probabilities
+
+
+@pytest.mark.parametrize("mode", [None, "dfr", "sparsegl", "gap", "gap_dynamic"])
+def test_sgl_all_screen_modes(mode):
+    X, y, g = synth()
+    est = SGL(g, screen=mode, length=5, term=0.3).fit(X, y)
+    assert est.predict(X).shape == (len(y), 5)
+
+
+def test_interpolate_exact_on_grid_and_between():
+    X, y, g = synth()
+    est = SGL(g, length=8, term=0.2).fit(X, y)
+    b, c = est.interpolate(float(est.lambdas_[3]))
+    assert np.array_equal(b, est.coef_path_[3]) and c == est.intercept_path_[3]
+    # between two grid points: coordinate-wise between the bracketing rows
+    mid = np.sqrt(est.lambdas_[3] * est.lambdas_[4])
+    bm, _ = est.interpolate(float(mid))
+    lo = np.minimum(est.coef_path_[3], est.coef_path_[4])
+    hi = np.maximum(est.coef_path_[3], est.coef_path_[4])
+    assert np.all(bm >= lo - 1e-7) and np.all(bm <= hi + 1e-7)
+    # clipping beyond the fitted range
+    b0, _ = est.interpolate(float(est.lambdas_[0]) * 10)
+    assert np.array_equal(b0, est.coef_path_[0])
+
+
+def test_score_linear_r2_and_logistic_accuracy():
+    X, y, g = synth()
+    est = SGL(g, length=6, term=0.2).fit(X, y)
+    s = est.score(X, y)
+    assert s.shape == (6,)
+    assert s[-1] > s[0]                  # densest fit beats the null end
+    assert est.score(X, y, float(est.lambdas_[-1])) == pytest.approx(s[-1])
+    Xl, yl, _ = synth(loss="logistic")
+    el = SGL(g, loss="logistic", length=6, term=0.3).fit(Xl, yl)
+    acc = el.score(Xl, yl)
+    assert np.all((0 <= acc) & (acc <= 1))
+
+
+def test_sgl_standardize_folds_transform_back():
+    rng = np.random.default_rng(3)
+    X, y, g = synth(seed=3)
+    Xs = X * rng.uniform(0.5, 20.0, X.shape[1])[None, :] + \
+        rng.normal(0, 2, X.shape[1])[None, :]
+    est = SGL(g, length=6, term=0.3, standardize=True).fit(Xs, y)
+    # coefficients are on the ORIGINAL column scale: raw-X matmul agrees
+    # with the estimator's own prediction path
+    eta = Xs.astype(np.float32) @ est.coef_path_.T + est.intercept_path_[None, :]
+    np.testing.assert_allclose(est.predict(Xs), eta, atol=1e-4)
+    assert est.center_ is not None and est.scale_ is not None
+
+
+def test_user_lambda_grid_must_be_decreasing():
+    X, y, g = synth()
+    with pytest.raises(ValueError, match="decreasing"):
+        SGL(g, lambdas=[0.01, 0.1, 1.0])
+    # a valid descending grid round-trips through fit + interpolate
+    est = SGL(g, lambdas=[0.05, 0.02, 0.01]).fit(X, y)
+    b, _ = est.interpolate(0.02)
+    assert np.array_equal(b, est.coef_path_[1])
+
+
+def test_unfitted_and_bad_inputs():
+    X, y, g = synth()
+    est = SGL(g)
+    with pytest.raises(RuntimeError):
+        est.predict(X)
+    with pytest.raises(ValueError):
+        SGL(g).fit(X[:, :10], y)          # wrong p for the groups
+    with pytest.raises(ValueError):
+        SGL()  .fit(X, y)                 # no groups anywhere
+    with pytest.raises(ValueError):
+        SGL(g, loss="poisson")
+    with pytest.raises(ValueError):
+        SGL(g, alpha=2.0)
+
+
+# ---------------------------------------------------------------------------
+# save / load round-trips
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip_sgl(tmp_path):
+    X, y, g = synth()
+    est = SGL(g, alpha=0.9, length=6, term=0.3).fit(X, y)
+    f = os.path.join(tmp_path, "m.npz")
+    est.save(f)
+    est2 = load(f)
+    assert type(est2) is SGL
+    assert est2.config == est.config
+    assert np.array_equal(est2.coef_path_, est.coef_path_)
+    assert np.array_equal(est2.lambdas_, est.lambdas_)
+    assert np.array_equal(np.asarray(est2.groups_.sizes),
+                          np.asarray(est.groups_.sizes))
+    # the acceptance bar: bitwise-identical predictions after the round-trip
+    assert np.array_equal(est2.predict(X), est.predict(X))
+    assert np.array_equal(est2.diagnostics_.active_v, est.diagnostics_.active_v)
+
+
+def test_save_load_roundtrip_adaptive(tmp_path):
+    X, y, g = synth(seed=5)
+    est = AdaptiveSGL(g, gamma1=0.2, gamma2=0.2, length=5, term=0.3).fit(X, y)
+    assert est.v_ is not None and est.w_ is not None
+    f = os.path.join(tmp_path, "a.npz")
+    est.save(f)
+    est2 = load(f)
+    assert type(est2) is AdaptiveSGL
+    assert est2.config.adaptive and est2.config.gamma1 == 0.2
+    assert np.array_equal(est2.v_, est.v_)
+    assert np.array_equal(est2.predict(X), est.predict(X))
+
+
+def test_save_load_roundtrip_cv(tmp_path):
+    X, y, g = synth(seed=7)
+    cv = SGLCV(g, alphas=(0.5, 0.95), folds=3, length=5, term=0.3).fit(X, y)
+    f = os.path.join(tmp_path, "cv.npz")
+    cv.save(f)
+    cv2 = load(f)
+    assert type(cv2) is SGLCV
+    assert cv2.best_lambda_ == cv.best_lambda_
+    assert cv2.best_alpha_ == cv.best_alpha_
+    assert np.array_equal(cv2.cv_result_.cv_error, cv.cv_result_.cv_error)
+    assert np.array_equal(cv2.predict(X), cv.predict(X))
+
+
+# ---------------------------------------------------------------------------
+# SGLCV
+# ---------------------------------------------------------------------------
+
+def test_sglcv_best_lambda_consistent_with_best_index():
+    X, y, g = synth(seed=9)
+    cv = SGLCV(g, alphas=(0.5, 0.95), folds=3, length=6, term=0.2).fit(X, y)
+    ai, li = cv.cv_result_.best_index
+    assert cv.best_alpha_ == float(cv.cv_result_.alphas[ai])
+    assert cv.best_lambda_ == float(cv.cv_result_.lambdas[ai, li])
+    assert cv.best_lambda_ == cv.cv_result_.best_lambda
+    # the refit grid IS the winning alpha's full-data grid
+    assert np.array_equal(cv.lambdas_, cv.cv_result_.lambdas[ai])
+    assert cv.config.alpha == cv.best_alpha_
+
+
+def test_sglcv_predict_defaults_to_best_lambda():
+    X, y, g = synth(seed=9)
+    cv = SGLCV(g, alphas=(0.95,), folds=3, length=6, term=0.2).fit(X, y)
+    pred = cv.predict(X)
+    assert pred.shape == (len(y),)
+    np.testing.assert_array_equal(pred, cv.predict(X, cv.best_lambda_))
+    assert cv.predict_full_path(X).shape == (len(y), 6)
+    assert np.isscalar(cv.score(X, y))
+    assert cv.coef_.shape == (g.p,)
