@@ -1,4 +1,5 @@
-"""Path-engine benchmark: engine vs the preserved seed driver -> BENCH_path.json.
+"""Path-engine benchmark: engine vs the preserved seed driver -> BENCH_path.json,
+and batched-fleet throughput vs the sequential loop -> BENCH_batch.json.
 
 Machine-readable perf trajectory for the pathwise driver, tracked from the
 engine PR onward: jit-warm wall-clock per DFR path fit, screen/solve split,
@@ -10,6 +11,12 @@ the same problem.  Run from the repo root:
 ``--backends jnp pallas`` also times the kernel backend (interpret mode
 off-TPU, so expect it to be slower on CPU — the number is recorded for the
 trajectory, not as a win).
+
+``--fleet 16`` additionally times a 16-problem shared-design fleet through
+the vmapped batch engine against the same problems run sequentially through
+``fit_path`` (problems/sec both ways, speedup, max per-problem betas
+deviation) and writes ``BENCH_batch.json``; the batched path must hold
+``MIN_FLEET_SPEEDUP`` at smoke scale.
 """
 from __future__ import annotations
 
@@ -27,13 +34,26 @@ from repro.core.path_reference import fit_path_reference
 
 # the estimator wrapper must not tax the hot path (ISSUE 2 benchmark guard)
 MAX_ESTIMATOR_OVERHEAD = 0.05
+# the vmapped fleet must beat the sequential loop by this factor at smoke
+# scale (ISSUE 3 benchmark guard)
+MIN_FLEET_SPEEDUP = 3.0
 
 SCALES = {
     "smoke": dict(n=200, p=2048, m=32, length=20),
     "full": dict(n=400, p=8192, m=128, length=50),
 }
+# The fleet benchmark has its own scale table: fleet workloads (eQTL /
+# multi-phenotype: one path fit per response) are MANY medium problems, not
+# one huge one — per-problem dispatch/sync overhead and screen cost are what
+# batching amortizes.  The >=3x floor is asserted at fleet smoke scale.
+FLEET_SCALES = {
+    "smoke": dict(n=100, p=192, m=12, length=20),
+    "full": dict(n=200, p=1024, m=32, length=50),
+}
 DEFAULT_OUT = os.path.abspath(os.path.join(
     os.path.dirname(__file__), "..", "BENCH_path.json"))
+DEFAULT_BATCH_OUT = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_batch.json"))
 
 
 def make_problem(n, p, m, seed=0):
@@ -121,15 +141,92 @@ def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
     return result
 
 
+def make_fleet_problems(n, p, m, B, seed=0):
+    """B shared-design problems: one X, per-problem responses and alphas."""
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([p // m] * m)
+    X = standardize(rng.normal(size=(n, p))).astype(np.float32)
+    Y = np.zeros((B, n), np.float32)
+    alphas = rng.uniform(0.7, 0.99, B)
+    for b in range(B):
+        beta = np.zeros(p)
+        for gi in rng.choice(m, 4, replace=False):
+            s = gi * (p // m)
+            beta[s:s + 8] = rng.normal(0, 2, 8)
+        Y[b] = X @ beta + 0.4 * rng.normal(size=n)
+    return X, Y, g, alphas
+
+
+def run_fleet(scale: str = "smoke", B: int = 16, out: str = DEFAULT_BATCH_OUT,
+              reps: int = 2) -> dict:
+    """Fleet throughput: vmapped batch engine vs the sequential loop."""
+    from repro.batch.engine import (fit_fleet_path, make_shared_fleet,
+                                    shared_fleet_lambda_grids)
+    from repro.core.config import FitConfig
+
+    spec = FLEET_SCALES[scale]
+    n, p, m, length = spec["n"], spec["p"], spec["m"], spec["length"]
+    X, Y, g, alphas = make_fleet_problems(n, p, m, B)
+    cfg = FitConfig(screen="dfr", length=length, term=0.1)
+    grids = shared_fleet_lambda_grids(X, Y, g, alphas, config=cfg)
+    Xd = jnp.asarray(X, jnp.float32)
+    probs = [Problem(Xd, jnp.asarray(Y[b], jnp.float32), "linear", True)
+             for b in range(B)]
+    pens = [Penalty(g, float(alphas[b])) for b in range(B)]
+
+    def sequential():
+        return [fit_path(probs[b], pens[b], lambdas=grids[b], config=cfg)
+                for b in range(B)]
+
+    def batched():
+        fleet = make_shared_fleet(X, Y, g, alphas)
+        return fit_fleet_path(fleet, grids, config=cfg, user_grid=False)
+
+    r_seq, t_seq = _timed(sequential, reps)
+    r_bat, t_bat = _timed(batched, reps)
+    dev = max(float(np.max(np.abs(r_seq[b].betas - r_bat.results[b].betas)))
+              for b in range(B))
+    result = {
+        "scale": scale, "n": n, "p": p, "m": m, "length": length,
+        "fleet_size": B, "screen": "dfr",
+        "sequential": {"total_s": t_seq, "problems_per_s": B / t_seq},
+        "batched": {"total_s": t_bat, "problems_per_s": B / t_bat,
+                    "buckets_compiled": list(r_bat.buckets)},
+        "speedup": t_seq / t_bat,
+        "max_abs_dbeta_vs_sequential": dev,
+        "min_speedup_required": MIN_FLEET_SPEEDUP,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print(f"[bench_path_engine] wrote {out}")
+    # guard AFTER recording: a noisy timing must not discard the trajectory
+    if scale == "smoke":
+        assert result["speedup"] >= MIN_FLEET_SPEEDUP, (
+            f"fleet speedup {result['speedup']:.2f}x below the "
+            f"{MIN_FLEET_SPEEDUP:.0f}x floor at smoke scale")
+    return result
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description="engine-vs-seed path benchmark")
     ap.add_argument("--scale", default="smoke", choices=sorted(SCALES))
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--batch-out", default=DEFAULT_BATCH_OUT)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--backends", nargs="+", default=["jnp"],
                     choices=["jnp", "pallas"])
+    ap.add_argument("--fleet", type=int, default=0, metavar="B",
+                    help="also benchmark a B-problem shared-design fleet "
+                         "(batched vs sequential) -> BENCH_batch.json")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="skip the engine-vs-seed benchmark")
     args = ap.parse_args(argv)
-    run(args.scale, args.out, args.reps, tuple(args.backends))
+    if not args.fleet_only:
+        run(args.scale, args.out, args.reps, tuple(args.backends))
+    if args.fleet:
+        run_fleet(args.scale, args.fleet, args.batch_out,
+                  reps=max(1, args.reps - 1))
     return 0
 
 

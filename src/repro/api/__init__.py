@@ -1,6 +1,6 @@
 """The public front door for SGL/aSGL fitting, tuning and serving.
 
-Two layers (see ROADMAP architecture notes):
+Three layers (see ROADMAP architecture notes):
 
 * **Config layer** — :class:`FitConfig` is the one frozen, validated,
   hashable object that owns every fitting knob; it is a static jax pytree
@@ -13,6 +13,10 @@ Two layers (see ROADMAP architecture notes):
   (:func:`predict_path`), and single-``.npz`` ``save()``/``load()`` whose
   round-trip reproduces predictions bitwise — the serving handoff
   (``python -m repro.launch.serve_sgl --model path.npz``).
+* **Batch layer** — :class:`BatchedSGL` fits fleets of problems over one
+  shared design concurrently (vmapped DFR paths, stacked
+  ``coef_path_ [B, l, p]``); :func:`fit_fleet` takes arbitrary
+  :class:`FitRequest` lists through the shape-bucketing scheduler.
 
     from repro.api import SGL, SGLCV, FitConfig
 
@@ -27,9 +31,12 @@ from ..core.losses import Problem
 from ..core.path import PathDiagnostics, PathResult, fit_path
 from ..core.penalties import Penalty
 from ..core.cv import CVResult, cv_fit_path, kfold_indices
+from ..batch import (BatchedSGL, FitRequest, FleetResult, fit_fleet,
+                     predict_fleet)
 
 __all__ = [
     "FitConfig", "SGL", "AdaptiveSGL", "SGLCV", "load", "predict_path",
     "GroupInfo", "Problem", "Penalty", "PathDiagnostics", "PathResult",
     "fit_path", "CVResult", "cv_fit_path", "kfold_indices",
+    "BatchedSGL", "FitRequest", "FleetResult", "fit_fleet", "predict_fleet",
 ]

@@ -1,0 +1,29 @@
+"""Batched multi-problem fit engine: vmapped DFR paths over problem fleets.
+
+The paper's genetics workloads fit one sparse-group lasso per gene or
+phenotype — thousands of path fits over the same design.  This package fits
+*fleets* of SGL/aSGL problems concurrently instead of sequentially:
+
+* :mod:`repro.batch.engine`    — :class:`BatchedPathEngine`: the fused
+  screen/solve/KKT steps of :mod:`repro.core.engine` vmapped over a problem
+  axis, with per-problem lambdas/alphas/weights as traced operands (one
+  compile covers the fleet) and per-problem masks inside shared
+  power-of-two solver buckets (the KKT guarantee stays per problem).
+* :mod:`repro.batch.scheduler` — shape-bucketing scheduler: groups
+  heterogeneous (n, p, groups) problems into padded power-of-two buckets so
+  arbitrary fleets reuse a handful of compilations; :func:`fit_fleet` is
+  the public entry point.
+* :mod:`repro.batch.estimator` — :class:`BatchedSGL`: sklearn-style
+  estimator for the shared-design case (one X, stacked y) with stacked
+  ``coef_path_`` and batched ``.npz`` save/load.
+"""
+from .engine import (BatchedPathEngine, Fleet, FleetResult, fit_fleet_path,
+                     make_shared_fleet)
+from .estimator import BatchedSGL, predict_fleet
+from .scheduler import FitRequest, FleetBucket, build_fleets, fit_fleet
+
+__all__ = [
+    "BatchedPathEngine", "Fleet", "FleetResult", "fit_fleet_path",
+    "make_shared_fleet", "BatchedSGL", "predict_fleet", "FitRequest",
+    "FleetBucket", "build_fleets", "fit_fleet",
+]

@@ -1,0 +1,821 @@
+"""Vmapped DFR path engine: fit a fleet of SGL/aSGL problems concurrently.
+
+:mod:`repro.core.engine` runs one problem at a time: per path point it pays
+two jit dispatches, two host syncs and one restricted solve.  Fitting B
+problems over the same design (eQTL / multi-phenotype GWAS: one genotype
+matrix, thousands of phenotypes) sequentially multiplies ALL of that by B.
+This module vmaps the fused screen/solve/KKT steps over a problem axis so a
+fleet pays the sequential per-point overhead ONCE:
+
+* per-problem quantities — lambda, alpha, adaptive weights, y, masks, warm
+  starts — ride as **traced operands** with a leading ``[B]`` axis, so one
+  compilation covers any fleet regardless of its mixing weights or grids
+  (contrast the sequential path, where alpha is static on ``Penalty``);
+* the restricted solve shares one power-of-two bucket across the fleet,
+  sized by the **max** active set, with per-problem gather indices and
+  masks — each lane solves exactly its own restricted problem (padding
+  slots gather the zero column and stay exactly zero), so the per-problem
+  KKT guarantee is untouched;
+* the driver's host syncs (bucket-width decision, violation counts) are one
+  ``[B]`` transfer per path point instead of B scalars.
+
+Two design layouts share every step: the **shared-design fast path**
+(``Xp [n, p+1]``, broadcast across lanes) and the stacked general case
+(``Xp [B, n, p+1]``, built by the scheduler's shape buckets).  Row padding
+for n-bucketed fleets is handled by a per-problem ``n_eff`` operand: padded
+tail rows are masked out of every residual/loss/intercept reduction, so a
+padded problem solves bit-for-bit the same optimization as its unpadded
+original.
+
+The per-problem inner math mirrors :func:`repro.core.solvers.fista`, the
+screening rules and the KKT audit line for line (it cannot call them
+directly: ``Penalty.alpha`` is static there, traced here) — the reference
+implementations stay in :mod:`repro.core`; ``tests/test_batch.py`` pins the
+batched lanes to sequential ``fit_path`` to <1e-5.
+
+Not supported in batched mode (use sequential :func:`repro.core.fit_path`):
+``solver="atos"``, ``backend="pallas"``, and ``screen="gap_dynamic"`` (its
+mid-solve re-screen loop is host-adaptive per problem).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.config import EngineKey, FitConfig
+from ..core.engine import bucket_width
+from ..core.groups import GroupInfo, expand, group_l2, to_padded
+from ..core.path import (PathResult, _metrics_init, _record, lambda_path,
+                         path_start)
+from ..core.losses import Problem
+from ..core.penalties import (Penalty, asgl_group_epsilon_norms, sgl_eps,
+                              sgl_group_epsilon_norms, sgl_tau, soft_threshold)
+from ..core.epsilon_norm import epsilon_norm
+
+BATCH_SCREEN_MODES = (None, "dfr", "sparsegl", "gap")
+
+
+# ---------------------------------------------------------------------------
+# the fleet container
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Fleet:
+    """B problems with identical static shape, ready for the vmapped steps.
+
+    ``Xp`` is the zero-column-extended design ``[X | 0]`` — shared
+    ``[n, p+1]`` or stacked ``[B, n, p+1]``.  Group layout arrays may be
+    shared (``[p]``/``[m]``) or per-problem (``[B, p]``/``[B, m]``, the
+    scheduler's padded buckets).  ``alpha`` is per-problem ``[B]`` and
+    TRACED; ``v``/``w`` are the aSGL weights (None for plain SGL);
+    ``n_eff`` is per-problem valid row counts (None when no row padding).
+    """
+
+    Xp: jnp.ndarray                      # [n, p+1] | [B, n, p+1]
+    Y: jnp.ndarray                       # [B, n]
+    alpha: jnp.ndarray                   # [B]
+    gid: jnp.ndarray                     # [p] | [B, p]
+    gsizes: jnp.ndarray                  # [m] | [B, m]
+    gstarts: jnp.ndarray                 # [m] | [B, m]
+    v: Optional[jnp.ndarray]             # [B, p] | None
+    w: Optional[jnp.ndarray]             # [B, m] | None
+    n_eff: Optional[jnp.ndarray]         # [B] | None
+    loss: str = "linear"
+    intercept: bool = True
+    p: int = 0
+    m: int = 0
+    max_size: int = 0
+    shared_x: bool = True
+    shared_g: bool = True
+
+    def tree_flatten(self):
+        leaves = (self.Xp, self.Y, self.alpha, self.gid, self.gsizes,
+                  self.gstarts, self.v, self.w, self.n_eff)
+        aux = (self.loss, self.intercept, self.p, self.m, self.max_size,
+               self.shared_x, self.shared_g)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def B(self) -> int:
+        return self.Y.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.Y.shape[1]
+
+    @property
+    def adaptive(self) -> bool:
+        return self.v is not None
+
+    # vmap axes for (Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff)
+    def _axes(self):
+        gax = None if self.shared_g else 0
+        return (None if self.shared_x else 0, 0, gax, gax, gax, 0,
+                None if self.v is None else 0,
+                None if self.w is None else 0,
+                None if self.n_eff is None else 0)
+
+
+def make_shared_fleet(X, Y, g: GroupInfo, alphas, *, loss: str = "linear",
+                      intercept: bool = True, v=None, w=None,
+                      dtype=jnp.float32) -> Fleet:
+    """Shared-design fleet: one ``X [n, p]``, stacked ``Y [B, n]``.
+
+    ``alphas`` is a scalar or ``[B]``; ``v``/``w`` are shared-X aSGL
+    weights ``[p]``/``[m]`` (broadcast to every lane) or per-problem
+    ``[B, p]``/``[B, m]``.
+    """
+    X = jnp.asarray(X, dtype)
+    Y = jnp.asarray(Y, dtype)
+    if Y.ndim != 2 or Y.shape[1] != X.shape[0]:
+        raise ValueError(f"Y must be [B, {X.shape[0]}], got {Y.shape}")
+    B = Y.shape[0]
+    if X.shape[1] != g.p:
+        raise ValueError(f"X must be [n, {g.p}] for these groups")
+    alphas = jnp.broadcast_to(jnp.asarray(alphas, dtype), (B,))
+    Xp = jnp.concatenate([X, jnp.zeros((X.shape[0], 1), dtype)], axis=1)
+    if v is not None:
+        v = jnp.broadcast_to(jnp.asarray(v, dtype), (B, g.p))
+        w = jnp.broadcast_to(jnp.asarray(w, dtype), (B, g.m))
+    return Fleet(Xp, Y, alphas, g.group_id, g.sizes, g.starts, v, w, None,
+                 loss=loss, intercept=intercept, p=g.p, m=g.m,
+                 max_size=g.max_size, shared_x=True, shared_g=True)
+
+
+# ---------------------------------------------------------------------------
+# per-problem inner math (vmapped by the fleet steps; alpha is TRACED)
+# ---------------------------------------------------------------------------
+
+def _g_of(gid, gsizes, gstarts, p, m, max_size) -> GroupInfo:
+    return GroupInfo(gid, gsizes, gstarts, p, m, max_size)
+
+
+def _residual(loss, y, eta, c, rmask):
+    if loss == "linear":
+        r = y - eta - c
+    else:
+        r = y - jax.nn.sigmoid(eta + c)
+    return r if rmask is None else jnp.where(rmask, r, 0.0)
+
+
+def _loss_value(loss, y, eta, c, rmask, nn):
+    if loss == "linear":
+        r = y - eta - c
+        if rmask is not None:
+            r = jnp.where(rmask, r, 0.0)
+        return 0.5 * jnp.dot(r, r) / nn
+    lin = eta + c
+    t = jnp.logaddexp(0.0, lin) - y * lin
+    if rmask is None:
+        return jnp.mean(t)
+    return jnp.sum(jnp.where(rmask, t, 0.0)) / nn
+
+
+def _intercept_update(loss, intercept, y, eta, c, rmask, nn):
+    """Mirror of ``solvers._intercept_from_eta`` with optional row masking."""
+    if not intercept:
+        return c
+    if loss == "linear":
+        if rmask is None:
+            return jnp.mean(y - eta)
+        return jnp.sum(jnp.where(rmask, y - eta, 0.0)) / nn
+
+    def body(_, c):
+        ph = jax.nn.sigmoid(eta + c)
+        if rmask is None:
+            gr = jnp.mean(ph - y)
+            h = jnp.maximum(jnp.mean(ph * (1 - ph)), 1e-6)
+        else:
+            gr = jnp.sum(jnp.where(rmask, ph - y, 0.0)) / nn
+            h = jnp.maximum(jnp.sum(jnp.where(rmask, ph * (1 - ph), 0.0)) / nn,
+                            1e-6)
+        return c - gr / h
+
+    return jax.lax.fori_loop(0, 4, body, c)
+
+
+def _null_intercept_one(y, n_eff, *, loss, intercept):
+    """Mirror of ``path.null_intercept`` with optional row masking."""
+    dt = y.dtype
+    if not intercept:
+        return jnp.array(0.0, dt)
+    if n_eff is None:
+        ybar = jnp.mean(y)
+    else:
+        rmask = jnp.arange(y.shape[0]) < n_eff
+        ybar = jnp.sum(jnp.where(rmask, y, 0.0)) / n_eff
+    if loss == "linear":
+        return ybar.astype(dt)
+    pbar = jnp.clip(ybar, 1e-6, 1 - 1e-6)
+    return jnp.log(pbar / (1 - pbar)).astype(dt)
+
+
+def _gradient_one(Xp, y, n_eff, beta, c, *, loss, p):
+    X = Xp[..., :p] if Xp.ndim == 2 else Xp[:, :p]
+    rmask = None if n_eff is None else (jnp.arange(y.shape[0]) < n_eff)
+    nn = y.shape[0] if n_eff is None else n_eff
+    r = _residual(loss, y, X @ beta, c, rmask)
+    return -(X.T @ r) / nn
+
+
+def _gap_screen_one(X, y, beta, g: GroupInfo, alpha, lam, nn, eps_method):
+    """Sequential GAP-safe sphere test (mirror of ``screening.gap_safe_screen``
+    with a traced alpha; linear loss only).  Divisions by ``tau`` are guarded
+    for the zero-size padding groups of bucketed fleets."""
+    lam_u = lam * nn
+    r = y - X @ beta
+    xtr = X.T @ r
+    zp, maskp = to_padded(xtr, g)
+    tau = sgl_tau(g, alpha)
+    en = epsilon_norm(zp, sgl_eps(g, alpha), maskp, method=eps_method)
+    dual = jnp.max(en / jnp.where(tau > 0, tau, 1.0))
+    theta = r / jnp.maximum(lam_u, dual)
+
+    r2 = y - X @ beta
+    primal = 0.5 * jnp.dot(r2, r2) + lam_u * (
+        alpha * jnp.sum(jnp.abs(beta)) +
+        (1.0 - alpha) * jnp.sum(g.sqrt_sizes * group_l2(beta, g)))
+    dual_obj = 0.5 * jnp.dot(y, y) - 0.5 * lam_u ** 2 * jnp.dot(
+        theta - y / lam_u, theta - y / lam_u)
+    gap = jnp.maximum(primal - dual_obj, 0.0)
+    r_rad = jnp.sqrt(2.0 * gap) / lam_u
+
+    xt_theta = X.T @ theta
+    col_norms = jnp.sqrt(jnp.sum(X * X, axis=0))
+    keep_vars = jnp.abs(xt_theta) + r_rad * col_norms > alpha
+    grp_frob = jnp.sqrt(jax.ops.segment_sum(col_norms ** 2, g.group_id,
+                                            num_segments=g.m))
+    st = soft_threshold(xt_theta, alpha)
+    t1 = group_l2(st, g) + r_rad * grp_frob
+    linf = jax.ops.segment_max(jnp.abs(xt_theta), g.group_id,
+                               num_segments=g.m)
+    t2 = jnp.maximum(linf + r_rad * grp_frob - alpha, 0.0)
+    T_g = jnp.where(linf > alpha, t1, t2)
+    # the sizes > 0 guard keeps the zero-size groups of padded stacked
+    # buckets out (their segment_max is -inf, which would pass the >= test
+    # and inflate the cand_g diagnostics; they hold no variables either way)
+    keep_groups = (T_g >= (1.0 - alpha) * g.sqrt_sizes) & (g.sizes > 0)
+    keep_vars = keep_vars & expand(keep_groups, g)
+    return keep_groups, keep_vars
+
+
+def _screen_one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff, grad, beta,
+                lam_k, lam_nx, *, mode, loss, p, m, max_size, eps_method):
+    """One problem's screening rule (mirror of ``screening.py`` with traced
+    alpha; the ``alpha == 0`` group-lasso corner via ``jnp.where``)."""
+    g = _g_of(gid, gsizes, gstarts, p, m, max_size)
+    thresh = 2.0 * lam_nx - lam_k
+    if mode == "dfr":
+        if v is not None:
+            en, gamma, _ = asgl_group_epsilon_norms(grad, beta, g, alpha, v, w,
+                                                    method=eps_method)
+            keep_g = en > gamma * thresh                            # Eq. 7
+            kv = jnp.abs(grad) > alpha * v * thresh                 # Eq. 8
+        else:
+            en = sgl_group_epsilon_norms(grad, g, alpha, method=eps_method)
+            keep_g = en > sgl_tau(g, alpha) * thresh                # Eq. 5
+            kv = jnp.abs(grad) > alpha * thresh                     # Eq. 6
+        keep_v = jnp.where(alpha == 0.0, expand(keep_g, g),
+                           kv & expand(keep_g, g))
+    elif mode == "sparsegl":
+        wv = w if w is not None else jnp.ones((m,), grad.dtype)
+        st = soft_threshold(grad, lam_nx * alpha)
+        keep_g = group_l2(st, g) > wv * g.sqrt_sizes * (1.0 - alpha) * thresh
+        keep_v = expand(keep_g, g)
+    elif mode == "gap":
+        X = Xp[:, :p]
+        nn = y.shape[0] if n_eff is None else n_eff
+        keep_g, keep_v = _gap_screen_one(X, y, beta, g, alpha, lam_nx, nn,
+                                         eps_method)
+    else:
+        raise ValueError(f"unsupported batched screen mode {mode!r} "
+                         f"(choose from {BATCH_SCREEN_MODES})")
+    mask = keep_v | (beta != 0)
+    return keep_g, keep_v, mask
+
+
+def _fista_one(Xs, y, gid_sub, alpha, v_sub, group_thr, lam, beta0, c0, step0,
+               tol, rmask, nn, *, loss, intercept, max_iters, m,
+               bt: float = 0.7, max_bt: int = 100):
+    """One restricted FISTA solve (mirror of ``solvers.fista``: backtracking,
+    adaptive restart, momentum-eta carry) with traced alpha/weights and
+    optional row masking.  Returns (beta, c, eta_beta, iters, conv, step).
+
+    The group reductions of the prox avoid ``segment_sum`` when
+    ``width * m`` is small: vmapped scatter-adds serialize badly on CPU, so
+    the hot loop uses a one-hot [width, m] matmul instead (same sums, GEMM
+    throughput); the memory-heavy large-bucket case keeps the scatter.
+    """
+    lam = jnp.asarray(lam, beta0.dtype)
+    width = beta0.shape[0]
+    thr_w = group_thr[gid_sub]                       # [width], loop-invariant
+
+    if width * m <= (1 << 16):
+        Gmask = jax.nn.one_hot(gid_sub, m, dtype=beta0.dtype)   # [width, m]
+
+        def group_sumsq(u):
+            return ((u * u) @ Gmask) @ Gmask.T       # sum then expand: [width]
+    else:
+        def group_sumsq(u):
+            ssq = jax.ops.segment_sum(u * u, gid_sub, num_segments=m)
+            return ssq[gid_sub]
+
+    def prox(z, t):
+        u = soft_threshold(z, t * alpha * v_sub)
+        nrm = jnp.sqrt(group_sumsq(u))
+        thr = t * thr_w
+        scale = jnp.where(nrm > 0,
+                          jnp.maximum(0.0, 1.0 - thr / jnp.where(nrm > 0, nrm, 1.0)),
+                          0.0)
+        return u * scale
+
+    class S(NamedTuple):
+        beta: jnp.ndarray
+        eta_beta: jnp.ndarray
+        z: jnp.ndarray
+        eta_z: jnp.ndarray
+        t: jnp.ndarray
+        c: jnp.ndarray
+        step: jnp.ndarray
+        it: jnp.ndarray
+        delta: jnp.ndarray
+
+    def cond(s: S):
+        return (s.it < max_iters) & (s.delta > tol)
+
+    def body(s: S):
+        c = _intercept_update(loss, intercept, y, s.eta_z, s.c, rmask, nn)
+        # (r, f) share one residual evaluation: for the linear loss
+        # f = 0.5 ||r||^2 / n with exactly the residual's float ops, so this
+        # is value-identical to solvers.fista's separate loss call
+        if loss == "linear":
+            r = y - s.eta_z - c
+            if rmask is not None:
+                r = jnp.where(rmask, r, 0.0)
+            f = 0.5 * jnp.dot(r, r) / nn
+        else:
+            r = _residual(loss, y, s.eta_z, c, rmask)
+            f = _loss_value(loss, y, s.eta_z, c, rmask, nn)
+        g = -(Xs.T @ r) / nn
+
+        def candidate(step):
+            b = prox(s.z - step * g, step * lam)
+            eta_b = Xs @ b
+            return b, eta_b, _loss_value(loss, y, eta_b, c, rmask, nn)
+
+        def bt_cond(carry):
+            step, it, b_new, eta_new, f_new = carry
+            d = b_new - s.z
+            ub = f + jnp.dot(g, d) + 0.5 * jnp.dot(d, d) / step
+            slack = 1e-6 * jnp.abs(f) + 1e-10
+            return (f_new > ub + slack) & (it < max_bt)
+
+        def bt_body(carry):
+            step, it = carry[0] * bt, carry[1] + 1
+            return (step, it, *candidate(step))
+
+        step, _, beta_new, eta_new, _ = jax.lax.while_loop(
+            bt_cond, bt_body, (s.step, jnp.array(0), *candidate(s.step)))
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * s.t ** 2))
+        mom = (s.t - 1.0) / t_new
+        z_new = beta_new + mom * (beta_new - s.beta)
+        eta_z_new = eta_new + mom * (eta_new - s.eta_beta)
+        restart = jnp.dot(s.z - beta_new, beta_new - s.beta) > 0
+        z_new = jnp.where(restart, beta_new, z_new)
+        eta_z_new = jnp.where(restart, eta_new, eta_z_new)
+        t_new = jnp.where(restart, 1.0, t_new)
+        denom = jnp.maximum(jnp.max(jnp.abs(beta_new)), 1.0)
+        delta = jnp.max(jnp.abs(beta_new - s.beta)) / denom
+        return S(beta_new, eta_new, z_new, eta_z_new, t_new, c, step,
+                 s.it + 1, delta)
+
+    eta0 = Xs @ beta0
+    s0 = S(beta0, eta0, beta0, eta0, jnp.array(1.0, beta0.dtype),
+           jnp.asarray(c0, beta0.dtype), jnp.asarray(step0, beta0.dtype),
+           jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
+    s = jax.lax.while_loop(cond, body, s0)
+    return s.beta, s.c, s.eta_beta, s.it, s.delta <= tol, s.step
+
+
+def _path_step_one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff, mask,
+                   beta, c, lam, step0, tol, *, width, max_iters, check_kkt,
+                   loss, intercept, p, m, max_size):
+    """gather -> restricted solve -> scatter -> gradient -> KKT, one problem.
+
+    The restricted layout mirrors ``penalties.restrict_penalty``: ascending
+    ``jnp.nonzero`` keeps groups contiguous, padding slots gather the zero
+    column of ``Xp`` and stay exactly zero, and the group threshold carries
+    the FULL group's ``w_g sqrt(p_g)``.  The KKT gradient is fed by the
+    restricted eta (one full matvec, as in ``core.engine.fused_path_step``).
+    """
+    dt = beta.dtype
+    idx_pad = jnp.nonzero(mask, size=width, fill_value=p)[0]
+    Xs = Xp[:, idx_pad]                                    # [n, width]
+    gid_ext = jnp.concatenate([gid, jnp.zeros((1,), gid.dtype)])
+    gid_sub = gid_ext[idx_pad]
+    sqrt_full = jnp.sqrt(gsizes.astype(dt))
+    w_full = w if w is not None else jnp.ones((m,), dt)
+    group_thr = (1.0 - alpha) * w_full * sqrt_full         # [m]
+    if v is not None:
+        v_sub = jnp.concatenate([v, jnp.zeros((1,), v.dtype)])[idx_pad]
+    else:
+        v_sub = jnp.ones((width,), dt)
+    b0 = jnp.concatenate([beta, jnp.zeros((1,), dt)])[idx_pad]
+    rmask = None if n_eff is None else (jnp.arange(y.shape[0]) < n_eff)
+    nn = y.shape[0] if n_eff is None else n_eff
+
+    beta_sub, c_new, eta, iters, conv, step = _fista_one(
+        Xs, y, gid_sub, alpha, v_sub, group_thr, lam, b0, c, step0, tol,
+        rmask, nn, loss=loss, intercept=intercept, max_iters=max_iters, m=m)
+
+    beta_full = jnp.zeros((p + 1,), dt).at[idx_pad].set(beta_sub)[:p]
+    X = Xp[:, :p]
+    r = _residual(loss, y, eta, c_new, rmask)
+    grad = -(X.T @ r) / nn
+    if check_kkt:
+        lhs = jnp.abs(soft_threshold(grad, lam * group_thr[gid]))
+        rhs = lam * alpha * (v if v is not None else 1.0)
+        viols = (lhs > rhs + 1e-10) & (~mask)
+    else:
+        viols = jnp.zeros((p,), bool)
+    return (beta_full, c_new, grad, viols, jnp.sum(viols), iters, conv, step)
+
+
+def _null_step_one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff, c, lam,
+                   mask, *, check_kkt, loss, p, m):
+    """Empty optimization set for the whole fleet: beta = 0, audit KKT."""
+    dt = Xp.dtype
+    beta = jnp.zeros((p,), dt)
+    grad = _gradient_one(Xp, y, n_eff, beta, c, loss=loss, p=p)
+    if check_kkt:
+        sqrt_full = jnp.sqrt(gsizes.astype(dt))
+        w_full = w if w is not None else jnp.ones((m,), dt)
+        lhs = jnp.abs(soft_threshold(grad, lam * (1.0 - alpha)
+                                     * (w_full * sqrt_full)[gid]))
+        rhs = lam * alpha * (v if v is not None else 1.0)
+        viols = (lhs > rhs + 1e-10) & (~mask)
+    else:
+        viols = jnp.zeros((p,), bool)
+    return beta, grad, viols, jnp.sum(viols)
+
+
+# ---------------------------------------------------------------------------
+# module-level jitted fleet steps (compile caches shared across fleets)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("mode",))
+def fleet_screen_step(fleet: Fleet, gradB, betaB, lam_kB, lam_nxB,
+                      key: EngineKey, *, mode: str):
+    """Screening for every lane -> (keep_g [B,m], keep_v [B,p], mask [B,p],
+    counts [B])."""
+    one = partial(_screen_one, mode=mode, loss=fleet.loss, p=fleet.p,
+                  m=fleet.m, max_size=fleet.max_size,
+                  eps_method=key.eps_method)
+    axes = fleet._axes() + (0, 0, 0, 0)
+    keep_g, keep_v, mask = jax.vmap(one, in_axes=axes)(
+        fleet.Xp, fleet.Y, fleet.gid, fleet.gsizes, fleet.gstarts,
+        fleet.alpha, fleet.v, fleet.w, fleet.n_eff, gradB, betaB,
+        lam_kB, lam_nxB)
+    return keep_g, keep_v, mask, jnp.sum(mask, axis=1)
+
+
+@partial(jax.jit, static_argnames=("width", "max_iters", "check_kkt"))
+def fleet_path_step(fleet: Fleet, maskB, betaB, cB, lamB, stepB, tol,
+                    key: EngineKey, *, width: int, max_iters: int,
+                    check_kkt: bool):
+    one = partial(_path_step_one, width=width, max_iters=max_iters,
+                  check_kkt=check_kkt, loss=fleet.loss,
+                  intercept=fleet.intercept, p=fleet.p, m=fleet.m,
+                  max_size=fleet.max_size)
+    axes = fleet._axes() + (0, 0, 0, 0, 0, None)
+    return jax.vmap(one, in_axes=axes)(
+        fleet.Xp, fleet.Y, fleet.gid, fleet.gsizes, fleet.gstarts,
+        fleet.alpha, fleet.v, fleet.w, fleet.n_eff, maskB, betaB, cB, lamB,
+        stepB, tol)
+
+
+@partial(jax.jit, static_argnames=("check_kkt",))
+def fleet_null_step(fleet: Fleet, cB, lamB, maskB, key: EngineKey, *,
+                    check_kkt: bool):
+    one = partial(_null_step_one, check_kkt=check_kkt, loss=fleet.loss,
+                  p=fleet.p, m=fleet.m)
+    axes = fleet._axes() + (0, 0, 0)
+    return jax.vmap(one, in_axes=axes)(
+        fleet.Xp, fleet.Y, fleet.gid, fleet.gsizes, fleet.gstarts,
+        fleet.alpha, fleet.v, fleet.w, fleet.n_eff, cB, lamB, maskB)
+
+
+@jax.jit
+def fleet_gradient_step(fleet: Fleet, betaB, cB):
+    one = partial(_gradient_one, loss=fleet.loss, p=fleet.p)
+    ax = fleet._axes()
+    return jax.vmap(one, in_axes=(ax[0], 0, ax[8], 0, 0))(
+        fleet.Xp, fleet.Y, fleet.n_eff, betaB, cB)
+
+
+@jax.jit
+def fleet_null_intercepts(fleet: Fleet):
+    one = partial(_null_intercept_one, loss=fleet.loss,
+                  intercept=fleet.intercept)
+    ax = fleet._axes()
+    return jax.vmap(one, in_axes=(0, ax[8]))(fleet.Y, fleet.n_eff)
+
+
+def _diag_one(mask, beta, keep_g, keep_v, gid, *, m):
+    act_v = beta != 0
+    act_per_g = jax.ops.segment_sum(act_v.astype(jnp.int32), gid,
+                                    num_segments=m)
+    opt_per_g = jax.ops.segment_sum(mask.astype(jnp.int32), gid,
+                                    num_segments=m)
+    return jnp.stack([jnp.sum(act_per_g > 0), jnp.sum(act_v),
+                      jnp.sum(keep_g), jnp.sum(keep_v),
+                      jnp.sum(opt_per_g > 0), jnp.sum(mask)])
+
+
+@jax.jit
+def fleet_diag_counts(fleet: Fleet, maskB, betaB, keep_gB, keep_vB):
+    """Per-lane diagnostics counters, computed on device -> [B, 6] ints
+    (active_g, active_v, cand_g, cand_v, opt_g, opt_v).  Padding variables
+    are never active/kept, so counts over the padded layout equal counts
+    over each lane's real variables."""
+    gax = None if fleet.shared_g else 0
+    one = partial(_diag_one, m=fleet.m)
+    return jax.vmap(one, in_axes=(0, 0, 0, 0, gax))(
+        maskB, betaB, keep_gB, keep_vB, fleet.gid)
+
+
+@jax.jit
+def _select_round(upd, new, old):
+    """One fused lane-select over the KKT-round state tuple."""
+    return tuple(
+        jnp.where(upd.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+        for n, o in zip(new, old))
+
+
+# ---------------------------------------------------------------------------
+# the batched engine + fleet driver
+# ---------------------------------------------------------------------------
+
+class BatchedPathEngine:
+    """Per-fleet state (warm-started per-lane step sizes, compiled widths)
+    over the module-level vmapped steps — the batch counterpart of
+    :class:`repro.core.engine.PathEngine`."""
+
+    def __init__(self, fleet: Fleet, config: FitConfig = None, **legacy):
+        self.config = FitConfig.from_kwargs(config, **legacy)
+        if self.config.backend != "jnp":
+            raise ValueError("BatchedPathEngine supports backend='jnp' only")
+        if self.config.solver != "fista":
+            raise ValueError("BatchedPathEngine supports solver='fista' only")
+        if self.config.screen not in BATCH_SCREEN_MODES:
+            raise ValueError(
+                f"batched fitting supports screen in {BATCH_SCREEN_MODES}; "
+                f"got {self.config.screen!r} (gap_dynamic's mid-solve "
+                "re-screen loop is host-adaptive per problem — use the "
+                "sequential fit_path)")
+        # same cross-field guard the sequential fit_path applies: GAP-safe
+        # screening exists for linear non-adaptive SGL only, and gap mode
+        # runs without a KKT safety net — a wrong screen would go uncorrected
+        self.config.validate_for(fleet.loss, fleet.adaptive)
+        self.key = self.config.engine_key
+        self.fleet = fleet
+        dt = fleet.Y.dtype
+        self.stepB = jnp.ones((fleet.B,), dt)
+        self.step_regrow = 0.7 ** -4        # same re-grow policy as PathEngine
+        self.widths: set = set()
+
+    def gradient(self, betaB, cB):
+        return fleet_gradient_step(self.fleet, betaB, cB)
+
+    def screen(self, gradB, betaB, lam_kB, lam_nxB, mode: str):
+        return fleet_screen_step(self.fleet, gradB, betaB, lam_kB, lam_nxB,
+                                 self.key, mode=mode)
+
+    def step(self, maskB, max_count: int, betaB, cB, lamB, *,
+             check_kkt: bool = True):
+        width = bucket_width(max_count, self.fleet.p, self.config.bucket_min)
+        self.widths.add(width)
+        step0 = jnp.minimum(self.stepB * self.step_regrow, 1.0)
+        out = fleet_path_step(self.fleet, maskB, betaB, cB, lamB, step0,
+                              self.config.tol, self.key, width=width,
+                              max_iters=self.config.max_iters,
+                              check_kkt=check_kkt)
+        return out
+
+    def null_step(self, cB, lamB, maskB, check_kkt: bool = True):
+        return fleet_null_step(self.fleet, cB, lamB, maskB, self.key,
+                               check_kkt=check_kkt)
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-problem :class:`PathResult` list plus fleet-level accounting."""
+
+    results: list                       # [B] PathResult, fleet lane order
+    fleet_size: int
+    buckets: tuple                      # solver bucket widths compiled
+    screen_time: float
+    solve_time: float
+
+    @property
+    def total_time(self) -> float:
+        return self.screen_time + self.solve_time
+
+
+def fit_fleet_path(fleet: Fleet, lambdas, *, config: FitConfig = None,
+                   user_grid: bool = True, trim=None, **legacy) -> FleetResult:
+    """Fit every lane's lambda path concurrently (the batch ``fit_path``).
+
+    ``lambdas`` is the per-problem grid ``[B, l]`` (glmnet order, strictly
+    decreasing per row).  ``user_grid=False`` marks rows as starting at each
+    problem's own lambda_1, so point 0 is the null model by construction.
+    ``trim`` is an optional list of ``(p_orig, GroupInfo_orig)`` per lane
+    (the scheduler's padded buckets): returned betas and diagnostics are cut
+    back to each problem's real variables.
+
+    Per-lane KKT loop semantics match sequential ``fit_path`` exactly: a
+    lane freezes (beta, intercept, gradient untouched) after its first
+    violation-free round while other lanes keep re-entering; the shared
+    bucket width follows the max active-set over the *still-active* lanes.
+    """
+    cfg = FitConfig.from_kwargs(config, **legacy)
+    engine = BatchedPathEngine(fleet, cfg)
+    B, p, n = fleet.B, fleet.p, fleet.n
+    lambdas = np.asarray(lambdas, np.float64)
+    if lambdas.shape[0] != B:
+        raise ValueError(f"lambdas must be [B={B}, l], got {lambdas.shape}")
+    l = lambdas.shape[1]
+    dt = fleet.Y.dtype
+
+    betas = np.zeros((B, l, p), dtype=dt)
+    intercepts = np.zeros((B, l), dtype=dt)
+    metrics = [_metrics_init() for _ in range(B)]
+    t_screen = 0.0
+    t_solve = 0.0
+
+    betaB = jnp.zeros((B, p), dt)
+    cB = fleet_null_intercepts(fleet)
+    gradB = engine.gradient(betaB, cB)
+    full_maskB = jnp.ones((B, p), bool)
+    check_kkt = cfg.check_kkt
+    # per-lane trimmed views for diagnostics (padded buckets cut back to the
+    # problem's real variables; shared-group fleets record on one GroupInfo)
+    if trim is not None:
+        lane_p = [t[0] for t in trim]
+        lane_g = [t[1] for t in trim]
+    else:
+        lane_p = [p] * B
+        lane_g = [_host_group_info(fleet, b) for b in range(B)]
+
+    if user_grid:
+        k0 = 0
+    else:
+        k0 = 1
+        intercepts[:, 0] = np.asarray(cB)
+        for b in range(B):
+            _record(metrics[b], lane_g[b], betas[b, 0, :lane_p[b]], None,
+                    np.zeros((lane_p[b],), bool), 0, 0, True)
+
+    zero_keep = None
+    for k in range(k0, l):
+        lam_kB = jnp.asarray(lambdas[:, max(k - 1, 0)], dt)
+        lamB = jnp.asarray(lambdas[:, k], dt)
+
+        # ---- screening (one vmapped pass for the fleet) ------------------
+        t0 = time.perf_counter()
+        screened = cfg.screen is not None
+        if not screened:
+            maskB = full_maskB
+            if zero_keep is None:
+                zero_keep = (jnp.zeros((B, fleet.m), bool),
+                             jnp.zeros((B, p), bool))
+            keep_gB, keep_vB = zero_keep
+            counts = np.full((B,), p)
+        else:
+            keep_gB, keep_vB, maskB, countB = engine.screen(
+                gradB, betaB, lam_kB, lamB, cfg.screen)
+            counts = np.asarray(countB)          # the one [B] bucket sync
+        t_screen += time.perf_counter() - t0
+
+        # ---- fused solve + per-lane KKT loop -----------------------------
+        t0 = time.perf_counter()
+        total_viols = np.zeros((B,), np.int64)
+        rounds = 0
+        done = np.zeros((B,), bool)
+        iterB = np.zeros((B,), np.int64)
+        convB = np.ones((B,), bool)
+        if int(counts.max()) == 0:
+            betaB, gradB, violsB, nvB = engine.null_step(cB, lamB, maskB,
+                                                         check_kkt)
+            nv0 = np.asarray(nvB)
+            total_viols += nv0
+            # violators re-enter and solve below if any lane reported them
+            done = nv0 == 0
+            if not done.all():
+                maskB = maskB | violsB
+                counts = counts + nv0
+        while not done.all() and rounds < cfg.kkt_max_rounds:
+            width_count = int(np.where(done, 0, counts).max())
+            (betaN, cN, gradN, violsN, nvN, itersN, convN, stepN) = \
+                engine.step(maskB, max(width_count, 1), betaB, cB, lamB,
+                            check_kkt=check_kkt)
+            upd = jnp.asarray(~done)
+            # frozen lanes keep their state; nv == 0 lanes' viols are all
+            # False, so OR-ing them into the mask is a no-op — one fused
+            # select covers the whole round state
+            (betaB, cB, gradB, stepB, maskB) = _select_round(
+                upd, (betaN, cN, gradN, stepN, maskB | violsN),
+                (betaB, cB, gradB, engine.stepB, maskB))
+            engine.stepB = stepB
+            nv = np.where(done, 0, np.asarray(nvN))   # one [B] sync per round
+            iterB = np.where(done, iterB, np.asarray(itersN))
+            convB = np.where(done, convB, np.asarray(convN))
+            total_viols += nv
+            rounds += 1
+            counts = counts + nv
+            done = done | (nv == 0)
+        t_solve += time.perf_counter() - t0
+
+        # ---- per-lane diagnostics (device-side counts, one [B,6] sync) ---
+        diag = np.asarray(fleet_diag_counts(fleet, maskB, betaB,
+                                            keep_gB, keep_vB))
+        beta_np = np.asarray(betaB)
+        c_np = np.asarray(cB)
+        betas[:, k, :] = beta_np
+        intercepts[:, k] = c_np
+        for b in range(B):
+            pb, gb = lane_p[b], lane_g[b]
+            ag, av, cg, cv, og, ov = (int(x) for x in diag[b])
+            if not screened:                 # no-screen convention: keep all
+                cg, cv, og, ov = gb.m, pb, gb.m, pb
+            mm = metrics[b]
+            mm["active_g"].append(ag)
+            mm["active_v"].append(av)
+            mm["cand_g"].append(cg)
+            mm["cand_v"].append(cv)
+            mm["opt_g"].append(og)
+            mm["opt_v"].append(ov)
+            mm["kkt_viols"].append(int(total_viols[b]))
+            mm["iters"].append(int(iterB[b]))
+            mm["converged"].append(bool(convB[b]))
+            mm["opt_prop_v"].append(ov / pb)
+            mm["opt_prop_g"].append(og / gb.m)
+        if cfg.verbose:
+            print(f"[fleet {k:3d}/{l}] B={B} max|O_v|={int(counts.max())} "
+                  f"viols={int(total_viols.sum())}")
+
+    buckets = tuple(sorted(engine.widths))
+    results = []
+    for b in range(B):
+        pb = trim[b][0] if trim is not None else p
+        results.append(PathResult(
+            lambdas[b], betas[b, :, :pb].copy(), intercepts[b].copy(),
+            metrics[b], t_screen / B, t_solve / B, buckets=buckets))
+    return FleetResult(results, B, buckets, t_screen, t_solve)
+
+
+def _host_group_info(fleet: Fleet, b: int) -> GroupInfo:
+    """Host-side GroupInfo for diagnostics recording of lane ``b``."""
+    if fleet.shared_g:
+        return GroupInfo(fleet.gid, fleet.gsizes, fleet.gstarts,
+                         fleet.p, fleet.m, fleet.max_size)
+    return GroupInfo(fleet.gid[b], fleet.gsizes[b], fleet.gstarts[b],
+                     fleet.p, fleet.m, fleet.max_size)
+
+
+def shared_fleet_lambda_grids(X, Y, g: GroupInfo, alphas, *,
+                              loss: str = "linear", intercept: bool = True,
+                              v=None, w=None, config: FitConfig = None,
+                              dtype=jnp.float32) -> np.ndarray:
+    """Per-problem auto grids ``[B, l]`` for a shared-design fleet: each
+    problem's lambda_1 via the sequential :func:`~repro.core.path.path_start`
+    (exact parity with per-problem ``fit_path``)."""
+    cfg = config if config is not None else FitConfig()
+    Y = np.asarray(Y)
+    B = Y.shape[0]
+    Xd = jnp.asarray(X, dtype)
+    out = np.zeros((B, cfg.length))
+    for b in range(B):
+        prob = Problem(Xd, jnp.asarray(Y[b], dtype), loss, intercept)
+        vb = None if v is None else jnp.asarray(np.asarray(v)[b]
+                                                if np.asarray(v).ndim == 2
+                                                else v, dtype)
+        wb = None if w is None else jnp.asarray(np.asarray(w)[b]
+                                                if np.asarray(w).ndim == 2
+                                                else w, dtype)
+        alpha_b = float(np.broadcast_to(np.asarray(alphas, float), (B,))[b])
+        pen = Penalty(g, alpha_b, vb, wb)
+        lam1 = float(path_start(prob, pen, method=cfg.eps_method))
+        out[b] = lambda_path(lam1, cfg.length, cfg.term)
+    return out

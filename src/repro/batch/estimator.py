@@ -1,0 +1,263 @@
+"""`BatchedSGL`: sklearn-style estimator for shared-design problem fleets.
+
+One design matrix, B response vectors (eQTL / multi-phenotype GWAS: one
+genotype matrix, one fit per phenotype) — fitted concurrently through the
+vmapped fleet engine and served as one stacked coefficient tensor:
+
+    model = BatchedSGL(groups, alphas=0.95).fit(X, Y)      # Y [B, n]
+    Yhat  = model.predict(Xnew)                            # [B, n, l]
+    model.save("fleet.npz")                                # one file, B paths
+
+``coef_path_`` is ``[B, l, p]`` on the ORIGINAL column scale (standardize
+folds back per lane), ``lambdas_`` is ``[B, l]`` (each problem gets its own
+auto grid), and ``save()``/``load()`` round-trips the whole fleet through a
+single ``.npz`` with bitwise-identical predictions — the batched analogue of
+the :class:`repro.core.estimator.SGL` serving contract, consumed by
+``repro.launch.serve_sgl`` (which reshapes the stacked paths to ``[B*l, p]``
+and serves every problem's every lambda in one matmul).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.adaptive import adaptive_weights
+from ..core.config import FitConfig
+from ..core.estimator import _FORMAT_VERSION, _as_group_info, _check_fitted
+from ..core.groups import GroupInfo
+from ..core.losses import standardize as standardize_columns
+from ..core.path import PathDiagnostics
+from .engine import FleetResult, fit_fleet_path, make_shared_fleet
+from .scheduler import FitRequest, fit_fleet
+
+
+@partial(jax.jit, static_argnames=("loss",))
+def predict_fleet(X, betasB, interceptsB, *, loss: str = "linear"):
+    """``[B, n, l]`` predictions: every problem's every lambda, one einsum."""
+    eta = jnp.einsum("np,blp->bnl", X, betasB) + interceptsB[:, None, :]
+    if loss == "logistic":
+        return jax.nn.sigmoid(eta)
+    return eta
+
+
+def fleet_estimator_from_results(reqs, results, config: FitConfig):
+    """Assemble a fitted :class:`BatchedSGL` from already-computed
+    shared-design :class:`~repro.core.path.PathResult` s (no refit — the
+    serve-after-fit-on-demand path).  The caller guarantees every request
+    shares (X, groups, loss) and the results share a grid length."""
+    g = reqs[0].groups
+    est = BatchedSGL(g, alphas=[config.alpha if r.alpha is None
+                                else float(r.alpha) for r in reqs],
+                     config=config, loss=reqs[0].loss)
+    est.coef_path_ = np.stack([r.betas for r in results])
+    est.intercept_path_ = np.stack([r.intercepts for r in results])
+    est.lambdas_ = np.stack([r.lambdas for r in results])
+    est.alphas_ = np.asarray(est.alphas, float)
+    est.diagnostics_ = [r.metrics for r in results]
+    est.groups_ = g
+    est.n_problems_ = len(results)
+    est.n_features_in_ = int(g.p)
+    est.fit_time_ = float(sum(r.total_time for r in results))
+    return est
+
+
+class BatchedSGL:
+    """Fleet of SGL/aSGL paths over one shared design.
+
+    Parameters mirror :class:`~repro.core.estimator.SGL` with the problem
+    axis added: ``alphas`` is a scalar or a per-problem ``[B]`` sequence,
+    ``lambdas`` an optional shared grid ``[l]`` or per-problem ``[B, l]``.
+    ``config.adaptive`` derives shared-X PCA weights once for the fleet.
+
+    Fitted attributes: ``lambdas_ [B, l]``, ``coef_path_ [B, l, p]``
+    (original column scale), ``intercept_path_ [B, l]``, ``alphas_ [B]``,
+    ``diagnostics_`` (list of per-problem :class:`PathDiagnostics`),
+    ``groups_``, ``n_problems_``, ``n_features_in_``.
+    """
+
+    def __init__(self, groups=None, *, alphas=None, loss: str = "linear",
+                 lambdas=None, config: FitConfig = None, **config_kw):
+        if loss not in ("linear", "logistic"):
+            raise ValueError(f"unknown loss {loss!r}")
+        cfg = FitConfig.from_kwargs(config, **config_kw)
+        self.config = cfg
+        self.groups = groups
+        self.loss = loss
+        self.alphas = alphas
+        if lambdas is not None:
+            lambdas = np.asarray(lambdas, float)
+            if np.any(np.diff(lambdas, axis=-1) >= 0):
+                raise ValueError("lambdas must be strictly decreasing")
+        self.lambdas = lambdas
+        self.coef_path_ = None
+        self.intercept_path_ = None
+        self.lambdas_ = None
+        self.alphas_ = None
+        self.diagnostics_: Optional[list] = None
+        self.groups_: Optional[GroupInfo] = None
+        self.n_problems_ = None
+        self.n_features_in_ = None
+        self.center_ = None
+        self.scale_ = None
+        self.v_ = None
+        self.w_ = None
+        self.fit_time_ = None
+        self._device_path = None
+
+    def _dtype(self):
+        return jnp.float64 if self.config.dtype == "float64" else jnp.float32
+
+    def fit(self, X, Y, groups=None) -> "BatchedSGL":
+        """Fit the whole fleet: ``X [n, p]`` shared, ``Y [B, n]`` stacked."""
+        cfg = self.config
+        cfg.validate_for(self.loss, cfg.adaptive)
+        g = _as_group_info(groups if groups is not None else self.groups)
+        X = np.asarray(X)
+        Y = np.asarray(Y)
+        if Y.ndim != 2 or Y.shape[1] != X.shape[0]:
+            raise ValueError(f"Y must be [B, {X.shape[0]}] (one row per "
+                             f"problem), got {Y.shape}")
+        if X.shape[1] != g.p:
+            raise ValueError(f"X must be [n, {g.p}] for these groups, "
+                             f"got {X.shape}")
+        B = Y.shape[0]
+        dt = self._dtype()
+        if cfg.standardize:
+            Xf, center, scale = standardize_columns(X, return_stats=True)
+        else:
+            center = scale = None
+            Xf = X
+        alphas = np.broadcast_to(
+            np.asarray(cfg.alpha if self.alphas is None else self.alphas,
+                       float), (B,)).copy()
+        Xd = jnp.asarray(Xf, dt)
+        v, w = adaptive_weights(Xd, g, cfg)
+
+        # one request per lane; the scheduler folds them into ONE
+        # shared-design fleet (same X object + same groups)
+        Xshared = np.asarray(Xf)
+        lambdas = self.lambdas
+        if lambdas is not None and lambdas.ndim == 1:
+            lambdas = np.broadcast_to(lambdas, (B, len(lambdas)))
+        reqs = [FitRequest(Xshared, Y[b], g, alpha=float(alphas[b]),
+                           lambdas=None if lambdas is None else lambdas[b],
+                           loss=self.loss,
+                           weights=None if v is None else (v, w))
+                for b in range(B)]
+        results = fit_fleet(reqs, config=cfg)
+
+        betas = np.stack([r.betas for r in results])          # [B, l, p]
+        intercepts = np.stack([r.intercepts for r in results])
+        if cfg.standardize:
+            betas = betas / scale[None, None, :].astype(betas.dtype)
+            intercepts = intercepts - np.einsum(
+                "blp,p->bl", betas, center.astype(betas.dtype))
+        self.coef_path_ = betas
+        self.intercept_path_ = np.asarray(intercepts)
+        self.lambdas_ = np.stack([r.lambdas for r in results])
+        self.alphas_ = alphas
+        self.diagnostics_ = [r.metrics for r in results]
+        self.groups_ = g
+        self.n_problems_ = int(B)
+        self.n_features_in_ = int(g.p)
+        self.center_ = None if center is None else np.asarray(center)
+        self.scale_ = None if scale is None else np.asarray(scale)
+        self.v_ = None if v is None else np.asarray(v)
+        self.w_ = None if w is None else np.asarray(w)
+        self.fit_time_ = float(sum(r.total_time for r in results))
+        self._device_path = None
+        return self
+
+    # -- prediction ---------------------------------------------------------
+
+    def _path_on_device(self):
+        if self._device_path is None:
+            dt = self._dtype()
+            self._device_path = (jnp.asarray(self.coef_path_, dt),
+                                 jnp.asarray(self.intercept_path_, dt))
+        return self._device_path
+
+    def predict(self, X) -> np.ndarray:
+        """``[B, n, l]``: every problem's whole path on ``X`` in one fused
+        einsum (logistic returns probabilities)."""
+        _check_fitted(self)
+        dt = self._dtype()
+        Xd = jnp.asarray(np.asarray(X), dt)
+        betasB, interceptsB = self._path_on_device()
+        return np.asarray(predict_fleet(Xd, betasB, interceptsB,
+                                        loss=self.loss))
+
+    def score(self, X, Y) -> np.ndarray:
+        """Per-problem, per-lambda R^2 (linear) or accuracy (logistic)
+        -> ``[B, l]``."""
+        _check_fitted(self)
+        Y = np.asarray(Y)
+        pred = self.predict(X)                            # [B, n, l]
+        if self.loss == "linear":
+            ss_res = np.sum((Y[:, :, None] - pred) ** 2, axis=1)
+            ss_tot = np.sum((Y - Y.mean(axis=1, keepdims=True)) ** 2, axis=1)
+            return 1.0 - ss_res / np.maximum(ss_tot[:, None],
+                                             np.finfo(float).tiny)
+        return np.mean((pred >= 0.5) == (Y[:, :, None] >= 0.5), axis=1)
+
+    def problem(self, b: int):
+        """(lambdas [l], coef [l, p], intercept [l]) of problem ``b``."""
+        _check_fitted(self)
+        return self.lambdas_[b], self.coef_path_[b], self.intercept_path_[b]
+
+    # -- serialization ------------------------------------------------------
+
+    def save(self, path) -> None:
+        """One ``.npz`` for the whole fleet; ``load(path).predict(X)`` is
+        bitwise identical to ``self.predict(X)`` in a fresh process."""
+        _check_fitted(self)
+        d = dict(
+            format_version=np.int64(_FORMAT_VERSION),
+            class_name=np.str_("BatchedSGL"),
+            config_json=np.str_(self.config.to_json()),
+            loss=np.str_(self.loss),
+            group_sizes=np.asarray(self.groups_.sizes),
+            lambdas=self.lambdas_,
+            alphas=self.alphas_,
+            coef_path=self.coef_path_,
+            intercept_path=self.intercept_path_,
+        )
+        for k in ("center_", "scale_", "v_", "w_"):
+            val = getattr(self, k)
+            if val is not None:
+                d[k.rstrip("_")] = val
+        for f in PathDiagnostics.__dataclass_fields__:
+            d[f"diag_{f}"] = np.stack(
+                [getattr(dg, f) for dg in self.diagnostics_])
+        np.savez(path, **d)
+
+    @classmethod
+    def load(cls, path) -> "BatchedSGL":
+        with np.load(path, allow_pickle=False) as f:
+            d = {k: f[k] for k in f.files}
+        name = str(d["class_name"][()])
+        if name != "BatchedSGL":
+            raise ValueError(f"not a BatchedSGL save file (class {name!r}); "
+                             "use repro.api.load for single-problem models")
+        cfg = FitConfig.from_json(str(d["config_json"][()]))
+        est = cls(config=cfg, loss=str(d["loss"][()]))
+        est.lambdas_ = d["lambdas"]
+        est.alphas_ = d["alphas"]
+        est.alphas = d["alphas"]
+        est.coef_path_ = d["coef_path"]
+        est.intercept_path_ = d["intercept_path"]
+        est.groups_ = GroupInfo.from_sizes(d["group_sizes"])
+        est.groups = est.groups_
+        est.n_problems_ = int(est.coef_path_.shape[0])
+        est.n_features_in_ = int(est.groups_.p)
+        for k in ("center", "scale", "v", "w"):
+            setattr(est, k + "_", d[k] if k in d else None)
+        diag_fields = list(PathDiagnostics.__dataclass_fields__)
+        est.diagnostics_ = [
+            PathDiagnostics(**{f: d[f"diag_{f}"][b] for f in diag_fields})
+            for b in range(est.n_problems_)]
+        return est

@@ -1,0 +1,324 @@
+"""Shape-bucketing scheduler: arbitrary problem fleets -> few compilations.
+
+The vmapped fleet steps (:mod:`repro.batch.engine`) need every lane of a
+fleet to share static shapes ``(n, p, m, max_size, loss, grid length)``.
+Real fleets are ragged.  This module buckets heterogeneous problems into the
+same power-of-two shapes the sequential engine already buckets its solver
+widths to, so any mix of problems reuses a handful of compiled fleet steps:
+
+* **shared-design fast path** — requests referencing the *same* ``X`` array
+  and group structure form one fleet with no padding at all (one ``[n, p+1]``
+  design broadcast across lanes);
+* **stacked buckets** — everything else is padded to
+  ``(pow2(n), pow2-ish p, pow2(m+1), pow2(max_size))``: rows are padded with
+  zeros and masked out of every reduction via the per-problem ``n_eff``
+  operand (a padded problem solves the *same* optimization as its
+  original), columns are padded with an all-zero **padding group** whose
+  gradient is identically zero — it is never screened in, never violates
+  KKT, and its coefficients stay exactly zero;
+* fleets larger than ``FitConfig.batch_max`` are chunked, and chunk sizes
+  are padded to powers of two (``batch_pad``) by repeating the first lane —
+  duplicate lanes are dropped from the output — so fleet *size* does not
+  multiply compilations either.
+
+:func:`fit_fleet` is the public entry point: a list of :class:`FitRequest`
+in, a list of per-problem :class:`~repro.core.path.PathResult` out (request
+order), each trimmed back to the problem's real variables and its own
+lambda grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.adaptive import pca_weights
+from ..core.config import FitConfig
+from ..core.groups import GroupInfo
+from ..core.losses import Problem
+from ..core.path import lambda_path, path_start
+from ..core.penalties import Penalty
+from .engine import Fleet, FleetResult, fit_fleet_path
+
+
+def pow2_ceil(x: int, minimum: int = 1) -> int:
+    """Smallest power of two >= max(x, minimum)."""
+    b = minimum
+    while b < x:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class FitRequest:
+    """One SGL/aSGL problem in a fleet.
+
+    ``alpha=None`` defers to ``config.alpha``; ``lambdas=None`` means the
+    problem gets its own auto grid (lambda_1 -> term*lambda_1, length from
+    the config).  ``weights=(v, w)`` are explicit aSGL weights; with
+    ``config.adaptive`` and no explicit weights, PCA weights are derived
+    per problem (once per distinct design).
+    """
+
+    X: np.ndarray
+    y: np.ndarray
+    groups: GroupInfo
+    alpha: Optional[float] = None
+    lambdas: Optional[np.ndarray] = None
+    loss: str = "linear"
+    weights: Optional[tuple] = None
+
+    def __post_init__(self):
+        if not isinstance(self.groups, GroupInfo):
+            self.groups = GroupInfo.from_sizes(
+                np.asarray(self.groups, np.int64))
+        y = np.asarray(self.y)
+        if y.ndim != 1 or y.shape[0] != np.shape(self.X)[0]:
+            raise ValueError(f"y must be [{np.shape(self.X)[0]}], "
+                             f"got {y.shape}")
+        if np.shape(self.X)[1] != self.groups.p:
+            raise ValueError(f"X must be [n, {self.groups.p}] for these "
+                             f"groups, got {np.shape(self.X)}")
+        if self.loss not in ("linear", "logistic"):
+            raise ValueError(f"unknown loss {self.loss!r}")
+
+
+@dataclasses.dataclass
+class FleetBucket:
+    """One compiled shape: the fleet, its grids, and the trim-back info."""
+
+    signature: tuple                 # the compile-shape key
+    indices: list                    # request index per lane (dups possible
+    #                                  from batch_pad padding lanes)
+    fleet: Fleet
+    lambdas: np.ndarray              # [B, l]
+    trim: list                       # [(p_orig, GroupInfo_orig)] per lane
+    shared_design: bool
+
+
+def _design_key(req: FitRequest) -> tuple:
+    """Identity of (X, groups) for shared-design detection.  Requests must
+    pass the *same array object* to share a design (cheap and unambiguous;
+    content hashing a [n, p] matrix per request would not be)."""
+    return (id(req.X), id(req.groups))
+
+
+def _grid_for(req: FitRequest, cfg: FitConfig, alpha: float, vw,
+              dtype) -> np.ndarray:
+    if req.lambdas is not None:
+        lams = np.asarray(req.lambdas, np.float64)
+        if lams.ndim != 1:
+            raise ValueError("per-request lambdas must be 1-D")
+        if len(lams) > 1 and np.any(np.diff(lams) >= 0):
+            raise ValueError("per-request lambdas must be strictly decreasing")
+        return lams
+    prob = Problem(jnp.asarray(req.X, dtype), jnp.asarray(req.y, dtype),
+                   req.loss, cfg.fit_intercept)
+    pen = Penalty(req.groups, alpha, *vw)
+    lam1 = float(path_start(prob, pen, method=cfg.eps_method))
+    return lambda_path(lam1, cfg.length, cfg.term)
+
+
+def _weights_for(req: FitRequest, cfg: FitConfig, dtype, cache: dict):
+    """(v, w) for one request: explicit > config.adaptive PCA > none.
+    PCA weights depend only on (X, groups) — cached per design."""
+    if req.weights is not None:
+        v, w = req.weights
+        return jnp.asarray(v, dtype), jnp.asarray(w, dtype)
+    if not cfg.adaptive:
+        return None, None
+    key = _design_key(req)
+    if key not in cache:
+        cache[key] = pca_weights(jnp.asarray(req.X, dtype), req.groups,
+                                 cfg.gamma1, cfg.gamma2)
+    return cache[key]
+
+
+def _pad_problem(req: FitRequest, v, w, n_pad: int, p_pad: int, m_pad: int,
+                 dtype):
+    """Zero-pad one problem to the bucket shape.  Returns per-lane arrays
+    (X [n_pad, p_pad], y [n_pad], gid [p_pad], sizes [m_pad],
+    starts [m_pad], v [p_pad] | None, w [m_pad] | None)."""
+    g = req.groups
+    n, p, m = req.y.shape[0], g.p, g.m
+    X = np.zeros((n_pad, p_pad), dtype)
+    X[:n, :p] = np.asarray(req.X)
+    y = np.zeros((n_pad,), dtype)
+    y[:n] = np.asarray(req.y)
+    # padding columns form group ``m`` (the padding group); groups
+    # m+1..m_pad-1 are empty
+    gid = np.full((p_pad,), m, np.int32)
+    gid[:p] = np.asarray(g.group_id)
+    sizes = np.zeros((m_pad,), np.int32)
+    sizes[:m] = np.asarray(g.sizes)
+    sizes[m] = p_pad - p
+    starts = np.full((m_pad,), p_pad, np.int32)
+    starts[:m] = np.asarray(g.starts)
+    starts[m] = p
+    vp = wp = None
+    if v is not None:
+        vp = np.zeros((p_pad,), dtype)
+        vp[:p] = np.asarray(v)
+        wp = np.ones((m_pad,), dtype)
+        wp[:m] = np.asarray(w)
+    return X, y, gid, sizes, starts, vp, wp
+
+
+def build_fleets(requests: Sequence[FitRequest], config: FitConfig = None,
+                 **legacy) -> list:
+    """Bucket requests into :class:`FleetBucket` s (pure scheduling: no fit).
+
+    Every request lands in exactly one bucket lane (plus possible padding
+    duplicates of lane 0 when ``batch_pad`` rounds a chunk up); stacked
+    bucket shapes are powers of two.
+    """
+    cfg = FitConfig.from_kwargs(config, **legacy)
+    dtype = np.float64 if cfg.dtype == "float64" else np.float32
+    requests = list(requests)
+    if not requests:
+        return []
+    pca_cache: dict = {}
+    alphas = [cfg.alpha if r.alpha is None else float(r.alpha)
+              for r in requests]
+    vw = [_weights_for(r, cfg, dtype, pca_cache) for r in requests]
+    grids = [_grid_for(r, cfg, alphas[i], vw[i], dtype)
+             for i, r in enumerate(requests)]
+
+    # ---- group lanes: shared-design first, padded shape buckets second ----
+    by_key: dict = {}
+    for i, r in enumerate(requests):
+        n, l = r.y.shape[0], len(grids[i])
+        shared = (_design_key(r), r.loss, l)
+        by_key.setdefault(shared, []).append(i)
+    shared_groups = {k: v for k, v in by_key.items() if len(v) > 1}
+    stacked: dict = {}
+    for k, idxs in by_key.items():
+        if k in shared_groups:
+            continue
+        for i in idxs:
+            r = requests[i]
+            g = r.groups
+            sig = (pow2_ceil(r.y.shape[0], 8),
+                   pow2_ceil(g.p + 1, 8),       # >= p+1: room for >=1 pad col
+                   pow2_ceil(g.m + 1),
+                   pow2_ceil(max(g.max_size, 1)),
+                   r.loss, len(grids[i]))
+            stacked.setdefault(sig, []).append(i)
+    # a problem with no bucket-mate gains nothing from pow2 padding — run it
+    # as an unpadded fleet of one instead of inflating its shapes
+    for sig in [s for s, v in stacked.items() if len(v) == 1]:
+        i = stacked.pop(sig)[0]
+        shared_groups[(_design_key(requests[i]), requests[i].loss,
+                       len(grids[i]))] = [i]
+
+    buckets = []
+
+    def chunk(idxs):
+        for s in range(0, len(idxs), cfg.batch_max):
+            part = idxs[s:s + cfg.batch_max]
+            if cfg.batch_pad:
+                target = min(pow2_ceil(len(part)), cfg.batch_max)
+                part = part + [part[0]] * (target - len(part))
+            yield part
+
+    for (dk, loss, l), idxs in shared_groups.items():
+        r0 = requests[idxs[0]]
+        g = r0.groups
+        Xd = jnp.asarray(r0.X, dtype)
+        Xp = jnp.concatenate([Xd, jnp.zeros((Xd.shape[0], 1), dtype)], axis=1)
+        for part in chunk(idxs):
+            Y = jnp.asarray(np.stack([np.asarray(requests[i].y, dtype)
+                                      for i in part]))
+            al = jnp.asarray(np.asarray([alphas[i] for i in part], dtype))
+            if any(vw[i][0] is not None for i in part):
+                # lanes without weights ride as v = w = 1 (exactly plain SGL)
+                ones = (jnp.ones((g.p,), dtype), jnp.ones((g.m,), dtype))
+                vB = jnp.stack([jnp.asarray(vw[i][0], dtype)
+                                if vw[i][0] is not None else ones[0]
+                                for i in part])
+                wB = jnp.stack([jnp.asarray(vw[i][1], dtype)
+                                if vw[i][1] is not None else ones[1]
+                                for i in part])
+            else:
+                vB = wB = None
+            fleet = Fleet(Xp, Y, al, g.group_id, g.sizes, g.starts, vB, wB,
+                          None, loss=loss, intercept=cfg.fit_intercept,
+                          p=g.p, m=g.m, max_size=g.max_size,
+                          shared_x=True, shared_g=True)
+            buckets.append(FleetBucket(
+                signature=("shared", Xd.shape[0], g.p, g.m, loss, l),
+                indices=list(part), fleet=fleet,
+                lambdas=np.stack([grids[i] for i in part]),
+                trim=[(g.p, g) for _ in part], shared_design=True))
+
+    for sig, idxs in stacked.items():
+        # max_size need not cover the padding group: its entries are
+        # identically zero, so the truncated [m, max_size] padded view the
+        # epsilon-norms consume is still exactly all-zero for it
+        n_pad, p_pad, m_pad, ms_pad, loss, l = sig
+        for part in chunk(idxs):
+            rows = [_pad_problem(requests[i], *vw[i], n_pad, p_pad, m_pad,
+                                 dtype) for i in part]
+            Xs = jnp.asarray(np.stack([r[0] for r in rows]))
+            Xp = jnp.concatenate(
+                [Xs, jnp.zeros((len(part), n_pad, 1), dtype)], axis=2)
+            Y = jnp.asarray(np.stack([r[1] for r in rows]))
+            gid = jnp.asarray(np.stack([r[2] for r in rows]))
+            sizes = jnp.asarray(np.stack([r[3] for r in rows]))
+            starts = jnp.asarray(np.stack([r[4] for r in rows]))
+            if any(r[5] is not None for r in rows):
+                vB = jnp.asarray(np.stack(
+                    [r[5] if r[5] is not None else np.ones((p_pad,), dtype)
+                     for r in rows]))
+                wB = jnp.asarray(np.stack(
+                    [r[6] if r[6] is not None else np.ones((m_pad,), dtype)
+                     for r in rows]))
+            else:
+                vB = wB = None
+            al = jnp.asarray(np.asarray([alphas[i] for i in part], dtype))
+            n_eff = jnp.asarray(np.asarray(
+                [requests[i].y.shape[0] for i in part], np.int32))
+            fleet = Fleet(Xp, Y, al, gid, sizes, starts, vB, wB, n_eff,
+                          loss=loss, intercept=cfg.fit_intercept, p=p_pad,
+                          m=m_pad, max_size=ms_pad, shared_x=False,
+                          shared_g=False)
+            buckets.append(FleetBucket(
+                signature=sig, indices=list(part), fleet=fleet,
+                lambdas=np.stack([grids[i] for i in part]),
+                trim=[(requests[i].groups.p, requests[i].groups)
+                      for i in part],
+                shared_design=False))
+    return buckets
+
+
+def fit_fleet(requests: Sequence[FitRequest], config: FitConfig = None,
+              buckets: Optional[list] = None, **legacy) -> list:
+    """Fit a fleet of SGL/aSGL problems; returns per-request
+    :class:`~repro.core.path.PathResult` s in request order.
+
+    Problems are bucketed by :func:`build_fleets` (shared-design fleets
+    unpadded; ragged problems zero-padded into power-of-two stacked
+    buckets) and each bucket runs the vmapped
+    :func:`~repro.batch.engine.fit_fleet_path`.  Pass ``buckets`` (a prior
+    ``build_fleets(requests, config)`` result for the SAME request list) to
+    skip re-scheduling.
+    """
+    cfg = FitConfig.from_kwargs(config, **legacy)
+    requests = list(requests)
+    results: list = [None] * len(requests)
+    user_grid = [r.lambdas is not None for r in requests]
+    if buckets is None:
+        buckets = build_fleets(requests, cfg)
+    for bucket in buckets:
+        # lanes in one bucket share the driver loop, so the null-head
+        # shortcut (k0=1) applies only if every lane has an auto grid
+        auto = all(not user_grid[i] for i in bucket.indices)
+        fr: FleetResult = fit_fleet_path(
+            bucket.fleet, bucket.lambdas, config=cfg,
+            user_grid=not auto, trim=bucket.trim)
+        for lane, i in enumerate(bucket.indices):
+            if results[i] is None:           # batch_pad dups: first wins
+                results[i] = fr.results[lane]
+    return results

@@ -67,6 +67,10 @@ class FitConfig:
     # -- engine -------------------------------------------------------------
     bucket_min: int = 8               # smallest power-of-two solver bucket
     verbose: bool = False
+    # -- batched multi-problem fit (repro.batch) ----------------------------
+    batch_max: int = 64               # max problems per compiled fleet chunk
+    batch_pad: bool = True            # pad fleet size to a power of two so
+    #                                   different fleet sizes share compiles
 
     def __post_init__(self):
         def bad(msg):
@@ -97,6 +101,8 @@ class FitConfig:
             bad(f"dynamic_every must be >= 1, got {self.dynamic_every}")
         if self.bucket_min < 1:
             bad(f"bucket_min must be >= 1, got {self.bucket_min}")
+        if self.batch_max < 1:
+            bad(f"batch_max must be >= 1, got {self.batch_max}")
         if self.gamma1 < 0 or self.gamma2 < 0:
             bad(f"gamma1/gamma2 must be >= 0, got ({self.gamma1}, {self.gamma2})")
         if self.backend == "pallas" and self.solver != "fista":

@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from .config import EngineKey, FitConfig
-from .kkt import kkt_check, kkt_gradient
+from .kkt import kkt_check_from_eta, kkt_gradient
 from .losses import Problem
 from .penalties import Penalty, restrict_penalty
 from .screening import (dfr_screen, dfr_screen_asgl, gap_safe_screen,
@@ -117,8 +117,13 @@ def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
     res = solve(prob_sub, pen_sub, lam, beta0=b0, c0=c, config=key,
                 max_iters=max_iters, tol=tol, step0=step0)
     beta_full = jnp.zeros((p + 1,), beta.dtype).at[idx_pad].set(res.beta)[:p]
-    grad, viols = kkt_check(prob, penalty, beta_full, res.intercept, lam, mask,
-                            check=check_kkt, backend=key.backend)
+    # eta via the restricted matrix (O(n*width)): screened-out coordinates are
+    # exactly zero, so Xs @ beta_sub == X @ beta_full and the KKT audit pays
+    # one full O(n*p) matvec (X^T r) per round instead of two.  The returned
+    # grad is the next screen_step's input — carried, never recomputed.
+    eta = Xs @ res.beta
+    grad, viols = kkt_check_from_eta(prob, penalty, eta, res.intercept, lam,
+                                     mask, check=check_kkt, backend=key.backend)
     return (beta_full, res.intercept, grad, viols, jnp.sum(viols),
             res.iters, res.converged, res.step)
 
@@ -128,8 +133,9 @@ def null_path_step(prob: Problem, penalty: Penalty, c, lam, mask,
                    key: EngineKey, *, check_kkt: bool):
     """Empty optimization set: beta = 0, still audit the KKT conditions."""
     beta = jnp.zeros((prob.p,), prob.X.dtype)
-    grad, viols = kkt_check(prob, penalty, beta, c, lam, mask,
-                            check=check_kkt, backend=key.backend)
+    eta = jnp.zeros((prob.n,), prob.X.dtype)
+    grad, viols = kkt_check_from_eta(prob, penalty, eta, c, lam, mask,
+                                     check=check_kkt, backend=key.backend)
     return beta, grad, viols, jnp.sum(viols)
 
 

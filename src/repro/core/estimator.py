@@ -200,12 +200,23 @@ class SGL:
     def interpolate(self, lambda_: float):
         """(beta [p], intercept) at ``lambda_``: exact on grid points, else
         linear interpolation in log(lambda) between the bracketing path
-        points (clipped to the fitted range)."""
+        points.  Raises ``ValueError`` outside the fitted range — silently
+        extrapolating (or clipping) would serve a model the path never
+        visited."""
         _check_fitted(self)
         lams = self.lambdas_                       # descending
+        lam = float(lambda_)
+        lo_lam, hi_lam = float(lams.min()), float(lams.max())
+        # tolerate float32/float64 round-trip noise exactly at the endpoints
+        eps = 1e-6 * max(hi_lam, 1e-30)
+        if lam < lo_lam - eps or lam > hi_lam + eps:
+            raise ValueError(
+                f"lambda_={lam:g} is outside the fitted path range "
+                f"[{lo_lam:g}, {hi_lam:g}]; refit with a wider grid or pick "
+                "a lambda on the path")
         if len(lams) == 1:
             return self.coef_path_[0], float(self.intercept_path_[0])
-        lam = float(np.clip(lambda_, lams.min(), lams.max()))
+        lam = float(np.clip(lam, lo_lam, hi_lam))
         # searchsorted needs ascending: work on the reversed grid
         asc = lams[::-1]
         j = int(np.searchsorted(asc, lam))
@@ -313,10 +324,14 @@ class SGL:
     def load(cls, path) -> "SGL":
         """Reconstruct a fitted estimator (SGL / AdaptiveSGL / SGLCV) from
         ``save()`` output.  Dispatches on the saved class name, so
-        ``SGL.load`` works for any of the three."""
+        ``SGL.load`` works for any of the three (and for ``BatchedSGL``
+        fleet saves via :mod:`repro.batch`)."""
         with np.load(path, allow_pickle=False) as f:
             d = {k: f[k] for k in f.files}
         name = str(d["class_name"][()])
+        if name == "BatchedSGL":
+            from ..batch.estimator import BatchedSGL
+            return BatchedSGL.load(path)
         klass = _CLASSES[name]
         cfg = FitConfig.from_json(str(d["config_json"][()]))
         est = klass.__new__(klass)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .groups import expand
-from .losses import Problem, gradient, residual
+from .losses import Problem, gradient, residual, residual_from_eta
 from .penalties import Penalty, soft_threshold
 
 
@@ -28,6 +28,21 @@ def kkt_gradient(prob: Problem, beta, c, backend: str = "jnp") -> jnp.ndarray:
     return gradient(prob, beta, c)
 
 
+def kkt_gradient_from_eta(prob: Problem, eta, c, backend: str = "jnp"):
+    """grad f from a precomputed linear predictor ``eta = X @ beta``.
+
+    The restricted solve already owns eta (``Xs @ beta_sub`` equals
+    ``X @ beta_full`` because every screened-out coordinate is exactly
+    zero), so the audit pays one O(n*p) matvec — ``X^T r`` — instead of
+    two.
+    """
+    r = residual_from_eta(prob, eta, c)
+    if backend == "pallas":
+        from ..kernels.ops import screen_gradient
+        return screen_gradient(prob.X, r)
+    return -(prob.X.T @ r) / prob.X.shape[0]
+
+
 def kkt_check(prob: Problem, penalty: Penalty, beta, c, lam, opt_mask, *,
               check: bool = True, backend: str = "jnp"):
     """Fused gradient + violation audit -> (grad [p], viols [p] bool).
@@ -37,6 +52,16 @@ def kkt_check(prob: Problem, penalty: Penalty, beta, c, lam, opt_mask, *,
     screening input.
     """
     grad = kkt_gradient(prob, beta, c, backend=backend)
+    if not check:
+        return grad, jnp.zeros((prob.p,), bool)
+    return grad, kkt_violations(grad, penalty, lam, opt_mask)
+
+
+def kkt_check_from_eta(prob: Problem, penalty: Penalty, eta, c, lam, opt_mask,
+                       *, check: bool = True, backend: str = "jnp"):
+    """:func:`kkt_check` variant fed by a precomputed ``eta = X @ beta``
+    (one full matvec instead of two — see :func:`kkt_gradient_from_eta`)."""
+    grad = kkt_gradient_from_eta(prob, eta, c, backend=backend)
     if not check:
         return grad, jnp.zeros((prob.p,), bool)
     return grad, kkt_violations(grad, penalty, lam, opt_mask)

@@ -55,6 +55,86 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """Problem-axis sharding for :mod:`repro.batch` fleets.
+
+    Fleet lanes are independent problems, so the leading ``[B]`` axis of
+    every per-problem operand shards over one mesh axis with NO cross-lane
+    collectives; a shared design can additionally shard its feature axis
+    over ``feature_axis`` (composing with ``dist_sgl``'s feature-parallel
+    layout: X columns on "model", problems on "data").
+
+    Use :meth:`shard_fleet` to place a :class:`repro.batch.engine.Fleet`
+    before ``fit_fleet_path`` — the jitted vmapped steps then partition
+    along the problem axis via GSPMD (auto-spmd, like ``dist_sgl``'s pjit
+    path), or wrap an explicitly-mapped per-shard function with
+    :meth:`fleet_map` (shard_map; lanes never communicate, so
+    ``check_vma=False`` is sound).
+    """
+
+    mesh: Mesh
+    axis: str = "data"                  # problem axis
+    feature_axis: Optional[str] = "model"
+
+    def _fits(self, dim: int, axis) -> bool:
+        return axis is not None and dim % self.mesh.shape[axis] == 0 \
+            and dim >= self.mesh.shape[axis]
+
+    def problem_ns(self, x) -> NamedSharding:
+        """Leading-axis sharding for a per-problem ``[B, ...]`` array (falls
+        back to replication when B does not divide the axis)."""
+        if x is None:
+            return None
+        b_ax = self.axis if self._fits(x.shape[0], self.axis) else None
+        return NamedSharding(self.mesh, P(b_ax, *([None] * (x.ndim - 1))))
+
+    def design_ns(self, Xp, shared: bool) -> NamedSharding:
+        """Design sharding: features over ``feature_axis`` (the extended
+        design's p+1 column makes exact division rare — replicate then)."""
+        f_ax = self.feature_axis if self._fits(Xp.shape[-1],
+                                               self.feature_axis) else None
+        if shared:
+            return NamedSharding(self.mesh, P(None, f_ax))
+        b_ax = self.axis if self._fits(Xp.shape[0], self.axis) else None
+        return NamedSharding(self.mesh, P(b_ax, None, f_ax))
+
+    def shard_fleet(self, fleet):
+        """Device_put a Fleet: problem axis over ``axis``, shared leaves
+        replicated (shared design optionally feature-sharded)."""
+        import dataclasses as _dc
+
+        def put_shared(x):
+            return None if x is None else jax.device_put(
+                x, NamedSharding(self.mesh, P(*([None] * x.ndim))))
+
+        def put_lane(x):
+            return None if x is None else jax.device_put(x, self.problem_ns(x))
+
+        gput = put_shared if fleet.shared_g else put_lane
+        return _dc.replace(
+            fleet,
+            Xp=jax.device_put(fleet.Xp,
+                              self.design_ns(fleet.Xp, fleet.shared_x)),
+            Y=put_lane(fleet.Y), alpha=put_lane(fleet.alpha),
+            gid=gput(fleet.gid), gsizes=gput(fleet.gsizes),
+            gstarts=gput(fleet.gstarts), v=put_lane(fleet.v),
+            w=put_lane(fleet.w), n_eff=put_lane(fleet.n_eff))
+
+    def fleet_map(self, fn, n_lane_args: int):
+        """shard_map ``fn`` over the problem axis: the first ``n_lane_args``
+        positional args are per-problem ``[B, ...]`` (sharded on ``axis``),
+        the rest are replicated; outputs are per-problem.  Lanes are
+        independent — no collectives inside ``fn``."""
+        def wrapper(*args):
+            lane = P(self.axis)
+            in_specs = tuple(lane if i < n_lane_args else P()
+                             for i in range(len(args)))
+            return shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                             out_specs=lane, check_vma=False)(*args)
+        return wrapper
+
+
+@dataclasses.dataclass(frozen=True)
 class MeshPlan:
     mesh: Mesh
     batch_axes: tuple            # ("data",) or ("pod","data")

@@ -1,19 +1,30 @@
-"""Batched SGL/aSGL path serving from a saved estimator — no refitting.
+"""Batched SGL/aSGL path serving from a saved estimator — no refitting —
+plus a fit-on-demand mode that drains a queue of fit requests through the
+batch scheduler.
 
+    # serve a saved model (single path or a BatchedSGL fleet)
     PYTHONPATH=src python -m repro.launch.serve_sgl --model model.npz \
         --batch 64 --requests 512
 
-Loads a ``repro.api`` estimator serialized with ``save()`` (a single
+    # fit-on-demand: drain 16 queued fit requests through the fleet
+    # scheduler, then serve predictions from the freshly fitted paths
+    PYTHONPATH=src python -m repro.launch.serve_sgl --fit-demand 16
+
+Serving loads a ``repro.api`` estimator serialized with ``save()`` (a single
 ``.npz``), moves the coefficient path to device once, and scores request
 batches with the same jitted :func:`repro.core.estimator.predict_path`
 matmul the estimator uses — every lambda of the path per request in one
 fused call, which is the shape serving traffic wants (the consumer picks
-its operating point per request, e.g. a per-tenant sparsity budget).
+its operating point per request, e.g. a per-tenant sparsity budget).  A
+:class:`repro.batch.BatchedSGL` fleet save serves all B problems' paths at
+once (the stacked ``[B, l, p]`` tensor flattens to one ``[B*l, p]`` matmul
+operand).
 
-``--lambda`` serves one interpolated path point instead.  Without
-``--model`` a small synthetic demo model is fitted, saved and served, so
-the module doubles as the end-to-end smoke for the save -> load -> predict
-handoff (the CI api-smoke job drives exactly this flow).
+``--lambda`` serves one interpolated path point instead (single-path models
+only).  Without ``--model`` a small synthetic demo model is fitted, saved
+and served, so the module doubles as the end-to-end smoke for the
+save -> load -> predict handoff (the CI api-smoke job drives exactly this
+flow; the batch-smoke job drives ``--fit-demand``).
 """
 from __future__ import annotations
 
@@ -21,6 +32,7 @@ import argparse
 import os
 import tempfile
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,17 +57,29 @@ def _demo_model(path: str, seed: int = 0) -> str:
     return path
 
 
+def _serving_path(est, lambda_: Optional[float]):
+    """(betas [L, p], intercepts [L]) to serve: the whole path, one
+    interpolated point, or a flattened fleet ([B, l, p] -> [B*l, p])."""
+    coef = est.coef_path_
+    if coef.ndim == 3:                       # BatchedSGL fleet
+        if lambda_ is not None:
+            raise ValueError("--lambda applies to single-path models; a "
+                             "fleet save serves every problem's whole path")
+        B, l, p = coef.shape
+        return (jnp.asarray(coef.reshape(B * l, p)),
+                jnp.asarray(est.intercept_path_.reshape(B * l)))
+    if lambda_ is None:
+        return jnp.asarray(coef), jnp.asarray(est.intercept_path_)
+    b, c = est.interpolate(lambda_)
+    betas = jnp.asarray(b[None, :])
+    return betas, jnp.asarray(np.asarray([c], betas.dtype))
+
+
 def serve(model_path: str, batch: int = 64, requests: int = 512,
-          lambda_: float = None, seed: int = 0) -> dict:
+          lambda_: Optional[float] = None, seed: int = 0) -> dict:
     est = SGL.load(model_path)
     p = est.n_features_in_
-    if lambda_ is None:
-        betas = jnp.asarray(est.coef_path_)
-        intercepts = jnp.asarray(est.intercept_path_)
-    else:
-        b, c = est.interpolate(lambda_)
-        betas = jnp.asarray(b[None, :])
-        intercepts = jnp.asarray(np.asarray([c], betas.dtype))
+    betas, intercepts = _serving_path(est, lambda_)
     rng = np.random.default_rng(seed)
     n_batches = (requests + batch - 1) // batch
     # fixed request shape -> one compiled matmul for the whole run
@@ -87,16 +111,113 @@ def serve(model_path: str, batch: int = 64, requests: int = 512,
     return stats
 
 
+# ---------------------------------------------------------------------------
+# fit-on-demand: a queue of fit requests drained through the fleet scheduler
+# ---------------------------------------------------------------------------
+
+def demo_fit_queue(n_problems: int, seed: int = 0):
+    """Synthetic fit-request queue: one shared design, per-problem
+    responses and alphas — the eQTL/multi-phenotype shape."""
+    from ..batch import FitRequest
+    rng = np.random.default_rng(seed)
+    n, m, gs = 120, 16, 12
+    g = GroupInfo.from_sizes([gs] * m)
+    X = np.asarray(standardize(rng.normal(size=(n, g.p))), np.float32)
+    reqs = []
+    for i in range(n_problems):
+        beta = np.zeros(g.p)
+        for gi in rng.choice(m, 3, replace=False):
+            s = gi * gs
+            beta[s:s + 4] = rng.normal(0, 2, 4)
+        y = (X @ beta + 0.4 * rng.normal(size=n)).astype(np.float32)
+        reqs.append(FitRequest(X, y, g,
+                               alpha=float(rng.uniform(0.7, 0.99))))
+    return reqs, X
+
+
+def fit_on_demand(reqs, config=None, save_to: Optional[str] = None) -> dict:
+    """Drain a queue of :class:`repro.batch.FitRequest` s through the shape-
+    bucketing scheduler (fleets of up to ``config.batch_max`` problems per
+    vmapped fit) and report fit throughput.  ``save_to`` additionally
+    serializes a homogeneous shared-design queue as one BatchedSGL ``.npz``
+    built from the already-fitted paths (no refit); heterogeneous queues
+    are fitted and served without a fleet save."""
+    from ..batch import build_fleets, fit_fleet
+    from ..core.config import FitConfig
+    cfg = config if config is not None else FitConfig(length=20, term=0.1)
+    buckets = build_fleets(reqs, cfg)       # scheduled ONCE, reused below
+    t0 = time.perf_counter()
+    results = fit_fleet(reqs, cfg, buckets=buckets)
+    dt = time.perf_counter() - t0
+    stats = {
+        "problems": len(reqs),
+        "fleets": len(buckets),
+        "fleet_sizes": [len(b.indices) for b in buckets],
+        "wall_s": dt,
+        "problems_per_s": len(reqs) / dt,
+        "path_points": int(sum(len(r.lambdas) for r in results)),
+    }
+    print(f"[serve_sgl] fit-on-demand: {stats['problems']} problems in "
+          f"{stats['fleets']} fleet(s), {dt:.3f}s "
+          f"({stats['problems_per_s']:.1f} problems/s)")
+    if save_to is not None:
+        r0 = reqs[0]
+        homogeneous = all(
+            r.X is r0.X and r.groups is r0.groups and r.loss == r0.loss
+            and len(res.lambdas) == len(results[0].lambdas)
+            for r, res in zip(reqs, results))
+        if not homogeneous:
+            print("[serve_sgl] queue is not a homogeneous shared-design "
+                  "fleet; skipping the fleet save")
+        else:
+            from ..batch.estimator import fleet_estimator_from_results
+            fleet_estimator_from_results(reqs, results, cfg).save(save_to)
+            print(f"[serve_sgl] fleet saved -> {save_to}")
+    return stats
+
+
+def _positive_float(name):
+    def parse(s):
+        v = float(s)
+        if not v > 0:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be positive, got {s!r}")
+        return v
+    return parse
+
+
+def _positive_int(name):
+    def parse(s):
+        v = int(s)
+        if v <= 0:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be a positive integer, got {s!r}")
+        return v
+    return parse
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description="serve a saved SGL path")
     ap.add_argument("--model", default=None,
-                    help=".npz from SGL/AdaptiveSGL/SGLCV .save(); "
-                         "omit to fit+serve a synthetic demo model")
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=512)
-    ap.add_argument("--lambda", dest="lambda_", type=float, default=None,
+                    help=".npz from SGL/AdaptiveSGL/SGLCV/BatchedSGL "
+                         ".save(); omit to fit+serve a synthetic demo model")
+    ap.add_argument("--batch", type=_positive_int("--batch"), default=64)
+    ap.add_argument("--requests", type=_positive_int("--requests"),
+                    default=512)
+    ap.add_argument("--lambda", dest="lambda_",
+                    type=_positive_float("--lambda"), default=None,
                     help="serve one interpolated path point instead of all")
+    ap.add_argument("--fit-demand", type=_positive_int("--fit-demand"),
+                    default=None, metavar="N",
+                    help="fit-on-demand mode: drain N queued synthetic fit "
+                         "requests through the fleet scheduler, save the "
+                         "fleet, then serve it")
     args = ap.parse_args(argv)
+    if args.fit_demand is not None:
+        save_to = os.path.join(tempfile.gettempdir(), "serve_sgl_fleet.npz")
+        fit_on_demand(demo_fit_queue(args.fit_demand)[0], save_to=save_to)
+        serve(save_to, args.batch, args.requests)
+        return 0
     model = args.model
     if model is None:
         model = _demo_model(os.path.join(tempfile.gettempdir(),

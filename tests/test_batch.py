@@ -1,0 +1,342 @@
+"""Batched multi-problem fit engine: vmapped fleet vs sequential fit_path
+equivalence (both losses, all supported screen modes), scheduler bucketing
+properties, batched estimator save/load round-trips, and fit-on-demand."""
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from jax.experimental import enable_x64
+
+from repro.core import (GroupInfo, Penalty, Problem, fit_path, pca_weights,
+                        standardize)
+from repro.core.config import FitConfig
+from repro.batch import (BatchedSGL, FitRequest, build_fleets, fit_fleet,
+                         fit_fleet_path, make_shared_fleet)
+from repro.batch.engine import BatchedPathEngine, shared_fleet_lambda_grids
+from repro.batch.scheduler import pow2_ceil
+
+
+def shared_problems(B=6, n=60, p=120, m=12, loss="linear", seed=0):
+    """One design, B responses + alphas (the eQTL shape)."""
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([p // m] * m)
+    X = standardize(rng.normal(size=(n, p)))
+    Y = np.zeros((B, n))
+    alphas = np.linspace(0.6, 0.95, B)
+    for b in range(B):
+        beta = np.zeros(p)
+        for gi in rng.choice(m, 3, replace=False):
+            s = gi * (p // m)
+            beta[s:s + 4] = rng.normal(0, 2, 4)
+        eta = X @ beta
+        if loss == "linear":
+            Y[b] = eta + 0.3 * rng.normal(size=n)
+        else:
+            Y[b] = (rng.uniform(size=n) < 1 / (1 + np.exp(-eta))).astype(float)
+    return X, Y, g, alphas
+
+
+def fleet_vs_sequential_dev(X, Y, g, alphas, cfg, dtype, loss="linear",
+                            v=None, w=None):
+    """Max |beta_batched - beta_sequential| over the fleet's lanes."""
+    grids = shared_fleet_lambda_grids(X, Y, g, alphas, loss=loss, v=v, w=w,
+                                      config=cfg, dtype=dtype)
+    fleet = make_shared_fleet(X, Y, g, alphas, loss=loss, v=v, w=w,
+                              dtype=dtype)
+    fr = fit_fleet_path(fleet, grids, config=cfg, user_grid=False)
+    dev = 0.0
+    for b in range(Y.shape[0]):
+        prob = Problem(jnp.asarray(X, dtype), jnp.asarray(Y[b], dtype),
+                       loss, True)
+        vb = None if v is None else jnp.asarray(v, dtype)
+        wb = None if w is None else jnp.asarray(w, dtype)
+        r = fit_path(prob, Penalty(g, float(alphas[b]), vb, wb), config=cfg)
+        assert np.allclose(r.lambdas, fr.results[b].lambdas)
+        dev = max(dev,
+                  float(np.max(np.abs(r.betas - fr.results[b].betas))),
+                  float(np.max(np.abs(r.intercepts - fr.results[b].intercepts))))
+    return dev, fr
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-sequential equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss", ["linear", "logistic"])
+def test_fleet_matches_sequential_16_problems_x64(loss):
+    """The acceptance bar: a 16-problem shared-design fleet matches
+    per-problem fit_path to <1e-5 (in float64 the lanes are algorithmically
+    identical — deviations are at solver-tolerance level)."""
+    X, Y, g, alphas = shared_problems(B=16, n=50, p=96, m=8, loss=loss)
+    with enable_x64():
+        cfg = FitConfig(screen="dfr", length=6, term=0.25, tol=1e-8,
+                        dtype="float64")
+        dev, _ = fleet_vs_sequential_dev(X, Y, g, alphas, cfg, jnp.float64,
+                                         loss=loss)
+    assert dev < 1e-5, dev
+
+
+@pytest.mark.parametrize("mode", [None, "dfr", "sparsegl", "gap"])
+def test_fleet_matches_sequential_all_screen_modes(mode):
+    X, Y, g, alphas = shared_problems(B=4, seed=2)
+    with enable_x64():
+        cfg = FitConfig(screen=mode, length=5, term=0.3, tol=1e-8,
+                        dtype="float64")
+        dev, fr = fleet_vs_sequential_dev(X, Y, g, alphas, cfg, jnp.float64)
+    assert dev < 1e-5, (mode, dev)
+    for b in fr.buckets:
+        assert b == g.p or (b & (b - 1)) == 0     # power-of-two solver buckets
+
+
+@pytest.mark.parametrize("mode", ["dfr", "sparsegl"])
+def test_fleet_matches_sequential_logistic_screens(mode):
+    X, Y, g, alphas = shared_problems(B=4, loss="logistic", seed=3)
+    with enable_x64():
+        cfg = FitConfig(screen=mode, length=5, term=0.3, tol=1e-8,
+                        dtype="float64")
+        dev, _ = fleet_vs_sequential_dev(X, Y, g, alphas, cfg, jnp.float64,
+                                         loss="logistic")
+    assert dev < 1e-5, (mode, dev)
+
+
+def test_fleet_matches_sequential_asgl():
+    """Adaptive fleets: shared PCA weights, per-problem alphas."""
+    X, Y, g, alphas = shared_problems(B=4, seed=4)
+    with enable_x64():
+        v, w = pca_weights(jnp.asarray(X, jnp.float64), g, 0.1, 0.1)
+        cfg = FitConfig(screen="dfr", length=5, term=0.3, tol=1e-8,
+                        adaptive=True, dtype="float64")
+        dev, _ = fleet_vs_sequential_dev(X, Y, g, alphas, cfg, jnp.float64,
+                                         v=np.asarray(v), w=np.asarray(w))
+    assert dev < 1e-5, dev
+
+
+def test_fleet_float32_smoke():
+    """f32 fleets track sequential within rounding-plateau tolerance."""
+    X, Y, g, alphas = shared_problems(B=4, seed=5)
+    cfg = FitConfig(screen="dfr", length=5, term=0.3, tol=1e-6)
+    dev, _ = fleet_vs_sequential_dev(X, Y, g, alphas, cfg, jnp.float32)
+    assert dev < 5e-4, dev
+
+
+def test_heterogeneous_fleet_matches_sequential():
+    """Ragged (n, p, groups) problems through the padded stacked buckets."""
+    rng = np.random.default_rng(6)
+    reqs, refs = [], []
+    for i, (n, m, gs) in enumerate([(40, 8, 9), (50, 10, 11), (40, 8, 9)]):
+        g = GroupInfo.from_sizes([gs] * m)
+        X = standardize(rng.normal(size=(n, g.p)))
+        beta = np.zeros(g.p)
+        beta[:5] = rng.normal(0, 2, 5)
+        y = X @ beta + 0.3 * rng.normal(size=n)
+        reqs.append((X, y, g, 0.7 + 0.05 * i))
+        refs.append((X, y, g, 0.7 + 0.05 * i))
+    with enable_x64():
+        cfg = FitConfig(screen="dfr", length=5, term=0.3, tol=1e-8,
+                        dtype="float64")
+        results = fit_fleet([FitRequest(X, y, g, alpha=a)
+                             for X, y, g, a in reqs], cfg)
+        for i, (X, y, g, a) in enumerate(refs):
+            prob = Problem(jnp.asarray(X, jnp.float64),
+                           jnp.asarray(y, jnp.float64), "linear", True)
+            r = fit_path(prob, Penalty(g, a), config=cfg)
+            assert results[i].betas.shape == r.betas.shape
+            dev = float(np.max(np.abs(r.betas - results[i].betas)))
+            assert dev < 1e-5, (i, dev)
+
+
+def test_fleet_user_grids():
+    """Per-request explicit grids: head-of-path solved, not nulled."""
+    X, Y, g, alphas = shared_problems(B=3, seed=7)
+    cfg = FitConfig(screen="dfr", tol=1e-6)
+    grids = shared_fleet_lambda_grids(X, Y, g, alphas,
+                                      config=cfg.replace(length=6, term=0.3))
+    reqs = [FitRequest(X, Y[b], g, alpha=float(alphas[b]),
+                       lambdas=grids[b][2:])          # start below lambda_1
+            for b in range(3)]
+    results = fit_fleet(reqs, cfg)
+    for b in range(3):
+        prob = Problem(jnp.asarray(X, jnp.float32),
+                       jnp.asarray(Y[b], jnp.float32), "linear", True)
+        r = fit_path(prob, Penalty(g, float(alphas[b])), lambdas=grids[b][2:],
+                     config=cfg)
+        assert results[b].metrics["active_v"][0] > 0
+        assert np.max(np.abs(r.betas - results[b].betas)) < 5e-4
+
+
+# ---------------------------------------------------------------------------
+# scheduler bucketing properties
+# ---------------------------------------------------------------------------
+
+def test_scheduler_every_problem_assigned_exactly_once():
+    rng = np.random.default_rng(8)
+    reqs = []
+    for i in range(11):
+        m = int(rng.integers(4, 9))
+        gs = int(rng.integers(5, 12))
+        n = int(rng.integers(30, 70))
+        g = GroupInfo.from_sizes([gs] * m)
+        X = rng.normal(size=(n, g.p))
+        reqs.append(FitRequest(X, rng.normal(size=n), g, alpha=0.9))
+    cfg = FitConfig(length=4, batch_max=4)
+    buckets = build_fleets(reqs, cfg)
+    seen = [i for b in buckets for i in dict.fromkeys(b.indices)]
+    assert sorted(set(seen)) == list(range(11))
+    # a request appears in exactly ONE bucket (padding dups stay in-bucket)
+    from collections import Counter
+    counts = Counter()
+    for b in buckets:
+        for i in set(b.indices):
+            counts[i] += 1
+    assert all(c == 1 for c in counts.values()), counts
+    for b in buckets:
+        assert len(b.indices) <= cfg.batch_max
+
+
+def test_scheduler_bucket_shapes_are_powers_of_two():
+    rng = np.random.default_rng(9)
+    reqs = []
+    for n, m, gs in [(33, 5, 7), (57, 9, 6), (40, 6, 10), (33, 5, 7)]:
+        g = GroupInfo.from_sizes([gs] * m)
+        reqs.append(FitRequest(rng.normal(size=(n, g.p)),
+                               rng.normal(size=n), g))
+    buckets = build_fleets(reqs, FitConfig(length=4))
+    stacked = [b for b in buckets if not b.shared_design]
+    singles = [b for b in buckets if b.shared_design]
+    # (33,5,7) twice -> one padded stacked bucket; the two problems with no
+    # bucket-mate run as unpadded fleets of one
+    assert len(stacked) == 1 and sorted(set(stacked[0].indices)) == [0, 3]
+    assert sorted(i for b in singles for i in b.indices) == [1, 2]
+    for b in singles:
+        assert b.fleet.B == 1 and b.fleet.p == reqs[b.indices[0]].groups.p
+    for b in stacked:
+        n_pad, p_pad, m_pad, ms_pad = b.signature[:4]
+        for v in (n_pad, p_pad, m_pad, ms_pad, b.fleet.B):
+            assert v & (v - 1) == 0, (b.signature, b.fleet.B)
+        # padded shapes hold every lane's real problem
+        for i in set(b.indices):
+            assert reqs[i].y.shape[0] <= n_pad
+            assert reqs[i].groups.p < p_pad
+            assert reqs[i].groups.m < m_pad
+
+
+def test_scheduler_shared_design_detection():
+    """Same X object + groups -> one unpadded shared fleet."""
+    rng = np.random.default_rng(10)
+    g = GroupInfo.from_sizes([8] * 6)
+    X = rng.normal(size=(40, g.p))
+    reqs = [FitRequest(X, rng.normal(size=40), g, alpha=0.8 + 0.02 * i)
+            for i in range(5)]
+    buckets = build_fleets(reqs, FitConfig(length=4, batch_max=8))
+    assert len(buckets) == 1 and buckets[0].shared_design
+    assert buckets[0].fleet.shared_x and buckets[0].fleet.shared_g
+    assert buckets[0].fleet.p == g.p                 # no padding
+    assert buckets[0].fleet.B == 8                   # batch_pad to pow2
+    assert buckets[0].indices[:5] == [0, 1, 2, 3, 4]
+    assert all(i == 0 for i in buckets[0].indices[5:])
+
+
+def test_pow2_ceil():
+    assert [pow2_ceil(x) for x in (1, 2, 3, 7, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert pow2_ceil(3, minimum=8) == 8
+
+
+# ---------------------------------------------------------------------------
+# batched engine guard rails
+# ---------------------------------------------------------------------------
+
+def test_batched_unsupported_configs_raise():
+    X, Y, g, alphas = shared_problems(B=2)
+    fleet = make_shared_fleet(X, Y, g, alphas)
+    with pytest.raises(ValueError, match="gap_dynamic"):
+        BatchedPathEngine(fleet, FitConfig(screen="gap_dynamic"))
+    with pytest.raises(ValueError, match="fista"):
+        BatchedPathEngine(fleet, FitConfig(solver="atos"))
+    with pytest.raises(ValueError, match="jnp"):
+        BatchedPathEngine(fleet, FitConfig(backend="pallas"))
+    with pytest.raises(ValueError):
+        FitConfig(batch_max=0)
+    # same cross-field guard as sequential fit_path: GAP-safe screening is
+    # linear non-adaptive only (gap mode has no KKT safety net)
+    Xl, Yl, gl, al = shared_problems(B=2, loss="logistic")
+    with pytest.raises(ValueError, match="linear"):
+        BatchedPathEngine(make_shared_fleet(Xl, Yl, gl, al, loss="logistic"),
+                          FitConfig(screen="gap"))
+
+
+# ---------------------------------------------------------------------------
+# BatchedSGL estimator: fit / predict / save / load
+# ---------------------------------------------------------------------------
+
+def test_batched_sgl_fit_predict_score():
+    X, Y, g, alphas = shared_problems(B=4, seed=11)
+    est = BatchedSGL(g, alphas=alphas, length=5, term=0.3).fit(X, Y)
+    assert est.coef_path_.shape == (4, 5, g.p)
+    assert est.lambdas_.shape == (4, 5)
+    pred = est.predict(X)
+    assert pred.shape == (4, X.shape[0], 5)
+    # lane predictions == single-problem predict_path
+    from repro.api import SGL
+    sgl = SGL(g, alpha=float(alphas[1]), length=5, term=0.3).fit(X, Y[1])
+    np.testing.assert_allclose(pred[1], sgl.predict(X), atol=5e-4)
+    sc = est.score(X, Y)
+    assert sc.shape == (4, 5)
+    assert np.all(sc[:, -1] > sc[:, 0])     # densest fit beats the null end
+
+
+def test_batched_sgl_save_load_bitwise():
+    X, Y, g, alphas = shared_problems(B=3, seed=12)
+    est = BatchedSGL(g, alphas=alphas, length=4, term=0.3).fit(X, Y)
+    pred = est.predict(X)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "fleet.npz")
+        est.save(path)
+        from repro.api import load
+        est2 = load(path)
+        assert type(est2).__name__ == "BatchedSGL"
+        assert np.array_equal(est2.predict(X), pred)
+        assert np.array_equal(est2.alphas_, est.alphas_)
+        assert len(est2.diagnostics_) == 3
+        assert est2.diagnostics_[0]["active_v"] == est.diagnostics_[0]["active_v"]
+
+
+def test_batched_sgl_standardize_folds_back():
+    rng = np.random.default_rng(13)
+    X, Y, g, alphas = shared_problems(B=3, seed=13)
+    Xs = X * rng.uniform(0.5, 10.0, X.shape[1])[None, :] + \
+        rng.normal(0, 1, X.shape[1])[None, :]
+    est = BatchedSGL(g, alphas=alphas, length=4, term=0.3,
+                     standardize=True).fit(Xs, Y)
+    eta = np.einsum("np,blp->bnl", Xs.astype(np.float32), est.coef_path_) \
+        + est.intercept_path_[:, None, :]
+    np.testing.assert_allclose(est.predict(Xs), eta, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fit-on-demand serving
+# ---------------------------------------------------------------------------
+
+def test_fit_on_demand_and_serve_fleet():
+    from repro.launch.serve_sgl import demo_fit_queue, fit_on_demand, serve
+    reqs, _ = demo_fit_queue(4, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "fleet.npz")
+        cfg = FitConfig(length=4, term=0.3)
+        stats = fit_on_demand(reqs, cfg, save_to=path)
+        assert stats["problems"] == 4
+        assert stats["fleets"] == 1
+        sstats = serve(path, batch=8, requests=16)
+        assert sstats["estimator"] == "BatchedSGL"
+        assert sstats["path_points"] == 4 * 4       # B * l flattened paths
+
+
+def test_serve_argparse_validation():
+    from repro.launch.serve_sgl import main
+    with pytest.raises(SystemExit):
+        main(["--batch", "0"])
+    with pytest.raises(SystemExit):
+        main(["--lambda", "-0.1"])
+    with pytest.raises(SystemExit):
+        main(["--requests", "-5"])

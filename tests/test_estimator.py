@@ -172,9 +172,16 @@ def test_interpolate_exact_on_grid_and_between():
     lo = np.minimum(est.coef_path_[3], est.coef_path_[4])
     hi = np.maximum(est.coef_path_[3], est.coef_path_[4])
     assert np.all(bm >= lo - 1e-7) and np.all(bm <= hi + 1e-7)
-    # clipping beyond the fitted range
-    b0, _ = est.interpolate(float(est.lambdas_[0]) * 10)
-    assert np.array_equal(b0, est.coef_path_[0])
+    # outside the fitted range: refuse to extrapolate, both endpoints
+    with pytest.raises(ValueError, match="outside the fitted path range"):
+        est.interpolate(float(est.lambdas_[0]) * 10)
+    with pytest.raises(ValueError, match="outside the fitted path range"):
+        est.interpolate(float(est.lambdas_[-1]) * 0.5)
+    # the exact endpoints themselves still resolve (no off-by-epsilon)
+    b_hi, _ = est.interpolate(float(est.lambdas_[0]))
+    assert np.array_equal(b_hi, est.coef_path_[0])
+    b_lo, _ = est.interpolate(float(est.lambdas_[-1]))
+    assert np.array_equal(b_lo, est.coef_path_[-1])
 
 
 def test_score_linear_r2_and_logistic_accuracy():
