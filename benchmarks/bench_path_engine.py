@@ -17,6 +17,12 @@ the vmapped batch engine against the same problems run sequentially through
 ``fit_path`` (problems/sec both ways, speedup, max per-problem betas
 deviation) and writes ``BENCH_batch.json``; the batched path must hold
 ``MIN_FLEET_SPEEDUP`` at smoke scale.
+
+The ``path_window`` block (always recorded) times the lambda-window fused
+engine against the sequential driver in the small-width regime it targets
+(points/sec both ways, window hit-rate), must hold ``MIN_WINDOW_SPEEDUP``
+at smoke scale, and asserts the windowed == sequential x64 equivalence
+contract (<1e-10) on every run.
 """
 from __future__ import annotations
 
@@ -37,10 +43,24 @@ MAX_ESTIMATOR_OVERHEAD = 0.05
 # the vmapped fleet must beat the sequential loop by this factor at smoke
 # scale (ISSUE 3 benchmark guard)
 MIN_FLEET_SPEEDUP = 3.0
+# the lambda-window engine must beat the sequential loop by this factor at
+# smoke scale in the small-width regime (ISSUE 4 benchmark guard), with
+# x64 betas identical to sequential under WINDOW_EQUIV_BOUND
+MIN_WINDOW_SPEEDUP = 1.5
+WINDOW_EQUIV_BOUND = 1e-10
 
 SCALES = {
     "smoke": dict(n=200, p=2048, m=32, length=20),
     "full": dict(n=400, p=8192, m=128, length=50),
+}
+# The window benchmark targets the small-width regime the windows were built
+# for: sparse truth, a path that stays above 0.5*lambda_1 (buckets hold at
+# the 8-16 floor), where the sequential loop is pure dispatch overhead.
+WINDOW_SCALES = {
+    "smoke": dict(n=200, p=2048, m=32, length=64, term=0.5, window=16,
+                  cap=64),
+    "full": dict(n=400, p=8192, m=128, length=96, term=0.5, window=16,
+                 cap=64),
 }
 # The fleet benchmark has its own scale table: fleet workloads (eQTL /
 # multi-phenotype: one path fit per response) are MANY medium problems, not
@@ -56,16 +76,16 @@ DEFAULT_BATCH_OUT = os.path.abspath(os.path.join(
     os.path.dirname(__file__), "..", "BENCH_batch.json"))
 
 
-def make_problem(n, p, m, seed=0):
+def make_problem(n, p, m, seed=0, active=4, coords=8, dtype=jnp.float32):
     rng = np.random.default_rng(seed)
     g = GroupInfo.from_sizes([p // m] * m)
     X = standardize(rng.normal(size=(n, p)))
     beta = np.zeros(p)
-    for gi in rng.choice(m, 4, replace=False):
+    for gi in rng.choice(m, active, replace=False):
         s = gi * (p // m)
-        beta[s:s + 8] = rng.normal(0, 2, 8)
+        beta[s:s + coords] = rng.normal(0, 2, coords)
     y = X @ beta + 0.4 * rng.normal(size=n)
-    prob = Problem(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+    prob = Problem(jnp.asarray(X, dtype), jnp.asarray(y, dtype),
                    "linear", True)
     return prob, Penalty(g, 0.95)
 
@@ -129,6 +149,9 @@ def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
             "overhead_vs_fit_path": overhead,
             "max_overhead_allowed": MAX_ESTIMATOR_OVERHEAD,
         }
+    # lambda-window engine vs sequential, small-width regime
+    result["path_window"] = win = _window_block(scale, reps)
+
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result, indent=2))
@@ -138,7 +161,64 @@ def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
         assert overhead < MAX_ESTIMATOR_OVERHEAD, (
             f"estimator wrapper overhead {overhead:.1%} exceeds "
             f"{MAX_ESTIMATOR_OVERHEAD:.0%} of direct fit_path wall-clock")
+    # windowed betas must be identical to sequential (CI-asserted contract)
+    assert win["equivalence_x64"]["max_abs_dbeta"] < WINDOW_EQUIV_BOUND, (
+        f"windowed path deviates from sequential by "
+        f"{win['equivalence_x64']['max_abs_dbeta']:.2e} in x64 "
+        f"(bound {WINDOW_EQUIV_BOUND:.0e})")
+    if scale == "smoke":
+        assert win["speedup"] >= MIN_WINDOW_SPEEDUP, (
+            f"window speedup {win['speedup']:.2f}x below the "
+            f"{MIN_WINDOW_SPEEDUP}x floor at smoke scale")
     return result
+
+
+def _window_block(scale: str, reps: int) -> dict:
+    """points/sec windowed vs sequential in the small-width regime, plus the
+    x64 windowed == sequential equivalence the windows guarantee."""
+    from jax.experimental import enable_x64
+
+    from repro.core.config import FitConfig
+
+    spec = WINDOW_SCALES[scale]
+    length = spec["length"]
+    prob, pen = make_problem(spec["n"], spec["p"], spec["m"], seed=1,
+                             active=2, coords=4)
+    base = FitConfig(screen="dfr", length=length, term=spec["term"],
+                     tol=1e-5)
+    cfg_win = base.replace(window=spec["window"],
+                           window_width_cap=spec["cap"])
+    r_seq, t_seq = _timed(lambda: fit_path(prob, pen, config=base), reps)
+    r_win, t_win = _timed(lambda: fit_path(prob, pen, config=cfg_win), reps)
+    dev_f32 = float(np.max(np.abs(r_seq.betas - r_win.betas)))
+
+    # exactness contract at x64/tight tol on a quick problem: windowed and
+    # sequential runs execute the same per-point program, so betas agree to
+    # float-association noise (<< 1e-10), never solver-tolerance noise
+    with enable_x64():
+        prob64, pen64 = make_problem(60, 120, 12, seed=2, active=2, coords=4,
+                                     dtype=jnp.float64)
+        eq = FitConfig(screen="dfr", length=10, term=0.2, tol=1e-12,
+                       dtype="float64")
+        r64_seq = fit_path(prob64, pen64, config=eq)
+        r64_win = fit_path(prob64, pen64,
+                           config=eq.replace(window=4, window_width_cap=256))
+        dev64 = float(np.max(np.abs(r64_seq.betas - r64_win.betas)))
+
+    return {
+        "n": spec["n"], "p": spec["p"], "m": spec["m"], "length": length,
+        "term": spec["term"], "window": spec["window"],
+        "window_width_cap": spec["cap"], "screen": "dfr",
+        "sequential": {"total_s": t_seq, "points_per_s": length / t_seq},
+        "windowed": {"total_s": t_win, "points_per_s": length / t_win,
+                     "window_hit_rate": r_win.diagnostics.window_hit_rate,
+                     "buckets_compiled": list(r_win.buckets)},
+        "speedup": t_seq / t_win,
+        "max_abs_dbeta_vs_sequential_f32": dev_f32,
+        "equivalence_x64": {"max_abs_dbeta": dev64,
+                            "bound": WINDOW_EQUIV_BOUND},
+        "min_speedup_required": MIN_WINDOW_SPEEDUP,
+    }
 
 
 def make_fleet_problems(n, p, m, B, seed=0):

@@ -17,7 +17,12 @@ fleet pays the sequential per-point overhead ONCE:
   slots gather the zero column and stay exactly zero), so the per-problem
   KKT guarantee is untouched;
 * the driver's host syncs (bucket-width decision, violation counts) are one
-  ``[B]`` transfer per path point instead of B scalars.
+  ``[B]`` transfer per path point instead of B scalars — and with
+  ``FitConfig.window > 1`` one transfer per lambda WINDOW: the ``[B]``
+  problem axis composes with the ``[W]`` window axis
+  (:func:`fleet_windowed_step`), every lane scanning its own lambda slice
+  inside one dispatch, with the fleet accepting the lane-wise minimum
+  violation-free prefix so the shared lambda index stays lockstep.
 
 Two design layouts share every step: the **shared-design fast path**
 (``Xp [n, p+1]``, broadcast across lanes) and the stacked general case
@@ -49,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.config import EngineKey, FitConfig
-from ..core.engine import bucket_width
+from ..core.engine import STEP_REGROW, bucket_width
 from ..core.groups import GroupInfo, expand, group_l2, to_padded
 from ..core.path import (PathResult, _metrics_init, _record, lambda_path,
                          path_start)
@@ -470,6 +475,98 @@ def _null_step_one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff, c, lam,
     return beta, grad, viols, jnp.sum(viols)
 
 
+def _window_screen_one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff, grad,
+                       beta, lam_prev, lam_win, *, mode, loss, p, m, max_size,
+                       eps_method):
+    """Speculative union screen over a lambda window, one problem (mirror of
+    ``core.engine.window_screen_step`` with traced alpha/weights)."""
+    one = partial(_screen_one, mode=mode, loss=loss, p=p, m=m,
+                  max_size=max_size, eps_method=eps_method)
+    keep_g0, keep_v0, mask0 = one(Xp, y, gid, gsizes, gstarts, alpha, v, w,
+                                  n_eff, grad, beta, lam_prev, lam_win[0])
+    if mode in ("dfr", "sparsegl"):
+        # monotone in lam_next (see window_screen_step): the last window
+        # point's candidate set is the union
+        _, keep_vW, _ = one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff,
+                            grad, beta, lam_prev, lam_win[-1])
+        union = keep_vW | mask0
+    else:
+        kv = jax.vmap(lambda lm: one(Xp, y, gid, gsizes, gstarts, alpha, v,
+                                     w, n_eff, grad, beta, lam_prev, lm)[1]
+                      )(lam_win)
+        union = jnp.any(kv, axis=0) | mask0
+    return keep_g0, keep_v0, mask0, union
+
+
+def _windowed_step_one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff,
+                       union_mask, beta, c, grad, lam_prev, lam_win, step0,
+                       tol, *, width, window, max_iters, mode, loss,
+                       intercept, p, m, max_size, eps_method):
+    """``window`` consecutive path points for one problem in one lax.scan
+    (mirror of ``core.engine.windowed_path_step`` with traced alpha/weights
+    and optional row masking).
+
+    One union-bucket gather serves the whole window; each point solves its
+    own screened set by zeroing the gathered columns outside its mask (a
+    zero column's gradient is exactly 0, so the coordinate is frozen at 0
+    without touching the solver).  The audit marks violations outside each
+    point's ``mask_j & union`` and ALWAYS runs — it is the window's
+    fallback signal even for modes without a sequential KKT loop.
+    """
+    dt = beta.dtype
+    idx_pad = jnp.nonzero(union_mask, size=width, fill_value=p)[0]
+    Xs = Xp[:, idx_pad]                                    # [n, width]
+    X = Xp[:, :p]
+    gid_ext = jnp.concatenate([gid, jnp.zeros((1,), gid.dtype)])
+    gid_sub = gid_ext[idx_pad]
+    sqrt_full = jnp.sqrt(gsizes.astype(dt))
+    w_full = w if w is not None else jnp.ones((m,), dt)
+    group_thr = (1.0 - alpha) * w_full * sqrt_full         # [m]
+    if v is not None:
+        v_sub = jnp.concatenate([v, jnp.zeros((1,), v.dtype)])[idx_pad]
+    else:
+        v_sub = jnp.ones((width,), dt)
+    rmask = None if n_eff is None else (jnp.arange(y.shape[0]) < n_eff)
+    nn = y.shape[0] if n_eff is None else n_eff
+    beta_sub0 = jnp.concatenate([beta, jnp.zeros((1,), dt)])[idx_pad]
+    screen = partial(_screen_one, mode=mode, loss=loss, p=p, m=m,
+                     max_size=max_size, eps_method=eps_method)
+
+    def body(carry, lam_j):
+        beta_sub, c_k, grad_k, beta_full, lam_k, step = carry
+        if mode is None:
+            keep_g = jnp.ones((m,), bool)
+            keep_v = jnp.ones((p,), bool)
+            mask_j = jnp.ones((p,), bool)
+        else:
+            keep_g, keep_v, mask_j = screen(Xp, y, gid, gsizes, gstarts,
+                                            alpha, v, w, n_eff, grad_k,
+                                            beta_full, lam_k, lam_j)
+        sub_mask = jnp.concatenate([mask_j, jnp.zeros((1,), bool)])[idx_pad]
+        Xs_j = jnp.where(sub_mask[None, :], Xs, jnp.zeros((), Xs.dtype))
+        step0_j = jnp.minimum(step * STEP_REGROW, 1.0)
+        beta_sub_j, c_j, eta, iters, conv, step_j = _fista_one(
+            Xs_j, y, gid_sub, alpha, v_sub, group_thr, lam_j,
+            jnp.where(sub_mask, beta_sub, 0.0), c_k, step0_j, tol, rmask, nn,
+            loss=loss, intercept=intercept, max_iters=max_iters, m=m)
+        beta_full_j = jnp.zeros((p + 1,), dt).at[idx_pad].set(beta_sub_j)[:p]
+        r = _residual(loss, y, eta, c_j, rmask)
+        grad_j = -(X.T @ r) / nn
+        solved = mask_j & union_mask
+        lhs = jnp.abs(soft_threshold(grad_j, lam_j * group_thr[gid]))
+        rhs = lam_j * alpha * (v if v is not None else 1.0)
+        viols = (lhs > rhs + 1e-10) & (~solved)
+        diag = _diag_one(mask_j, beta_full_j, keep_g, keep_v, gid, m=m)
+        out = (beta_full_j, c_j, grad_j, viols, jnp.sum(viols), iters, conv,
+               diag, step_j)
+        return (beta_sub_j, c_j, grad_j, beta_full_j, lam_j, step_j), out
+
+    carry0 = (beta_sub0, jnp.asarray(c, dt), grad, beta,
+              jnp.asarray(lam_prev, dt), jnp.asarray(step0, dt))
+    _, outs = jax.lax.scan(body, carry0, lam_win, length=window)
+    return outs
+
+
 # ---------------------------------------------------------------------------
 # module-level jitted fleet steps (compile caches shared across fleets)
 # ---------------------------------------------------------------------------
@@ -514,6 +611,45 @@ def fleet_null_step(fleet: Fleet, cB, lamB, maskB, key: EngineKey, *,
     return jax.vmap(one, in_axes=axes)(
         fleet.Xp, fleet.Y, fleet.gid, fleet.gsizes, fleet.gstarts,
         fleet.alpha, fleet.v, fleet.w, fleet.n_eff, cB, lamB, maskB)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def fleet_window_screen_step(fleet: Fleet, gradB, betaB, lam_prevB, lam_winB,
+                             key: EngineKey, *, mode: str):
+    """Union screen over a window for every lane -> (keep_g0 [B,m],
+    keep_v0 [B,p], mask0 [B,p], union [B,p], union_counts [B],
+    counts0 [B]).  ``lam_winB`` is [B, W] (per-lane grids)."""
+    one = partial(_window_screen_one, mode=mode, loss=fleet.loss, p=fleet.p,
+                  m=fleet.m, max_size=fleet.max_size,
+                  eps_method=key.eps_method)
+    axes = fleet._axes() + (0, 0, 0, 0)
+    keep_g0, keep_v0, mask0, union = jax.vmap(one, in_axes=axes)(
+        fleet.Xp, fleet.Y, fleet.gid, fleet.gsizes, fleet.gstarts,
+        fleet.alpha, fleet.v, fleet.w, fleet.n_eff, gradB, betaB,
+        lam_prevB, lam_winB)
+    return (keep_g0, keep_v0, mask0, union,
+            jnp.sum(union, axis=1), jnp.sum(mask0, axis=1))
+
+
+@partial(jax.jit, static_argnames=("width", "window", "max_iters", "mode"))
+def fleet_windowed_step(fleet: Fleet, union_maskB, betaB, cB, gradB,
+                        lam_prevB, lam_winB, stepB, tol, key: EngineKey, *,
+                        width: int, window: int, max_iters: int, mode):
+    """The ``[B]`` problem axis composed with the ``[W]`` window axis: every
+    lane runs its own windowed scan chain over its own lambda slice, all
+    inside ONE dispatch.  Returns per-lane per-point stacks
+    ``(betas [B,W,p], intercepts [B,W], grads [B,W,p], viols [B,W,p],
+    nviols [B,W], iters [B,W], conv [B,W], diag [B,W,6], steps [B,W])``.
+    """
+    one = partial(_windowed_step_one, width=width, window=window,
+                  max_iters=max_iters, mode=mode, loss=fleet.loss,
+                  intercept=fleet.intercept, p=fleet.p, m=fleet.m,
+                  max_size=fleet.max_size, eps_method=key.eps_method)
+    axes = fleet._axes() + (0, 0, 0, 0, 0, 0, 0, None)
+    return jax.vmap(one, in_axes=axes)(
+        fleet.Xp, fleet.Y, fleet.gid, fleet.gsizes, fleet.gstarts,
+        fleet.alpha, fleet.v, fleet.w, fleet.n_eff, union_maskB, betaB, cB,
+        gradB, lam_prevB, lam_winB, stepB, tol)
 
 
 @jax.jit
@@ -592,7 +728,7 @@ class BatchedPathEngine:
         self.fleet = fleet
         dt = fleet.Y.dtype
         self.stepB = jnp.ones((fleet.B,), dt)
-        self.step_regrow = 0.7 ** -4        # same re-grow policy as PathEngine
+        self.step_regrow = STEP_REGROW      # same re-grow policy as PathEngine
         self.widths: set = set()
 
     def gradient(self, betaB, cB):
@@ -616,6 +752,24 @@ class BatchedPathEngine:
     def null_step(self, cB, lamB, maskB, check_kkt: bool = True):
         return fleet_null_step(self.fleet, cB, lamB, maskB, self.key,
                                check_kkt=check_kkt)
+
+    # -- lambda-window mode --------------------------------------------------
+
+    def window_screen(self, gradB, betaB, lam_prevB, lam_winB, mode: str):
+        return fleet_window_screen_step(self.fleet, gradB, betaB, lam_prevB,
+                                        lam_winB, self.key, mode=mode)
+
+    def window_step(self, union_maskB, max_count: int, betaB, cB, gradB,
+                    lam_prevB, lam_winB):
+        """One fused multi-point step for the whole fleet.  Does NOT advance
+        ``stepB`` — the driver commits the last accepted point's steps."""
+        width = bucket_width(max_count, self.fleet.p, self.config.bucket_min)
+        self.widths.add(width)
+        return fleet_windowed_step(
+            self.fleet, union_maskB, betaB, cB, gradB, lam_prevB, lam_winB,
+            self.stepB, self.config.tol, self.key, width=width,
+            window=lam_winB.shape[1], max_iters=self.config.max_iters,
+            mode=self.config.screen)
 
 
 @dataclasses.dataclass
@@ -687,10 +841,101 @@ def fit_fleet_path(fleet: Fleet, lambdas, *, config: FitConfig = None,
             _record(metrics[b], lane_g[b], betas[b, 0, :lane_p[b]], None,
                     np.zeros((lane_p[b],), bool), 0, 0, True)
 
+    # lambda-window mode: the [B] problem axis composes with the [W] window
+    # axis — one fused step per window for the whole fleet, with the
+    # fleet-wide accepted prefix min_b(first violating point) and a
+    # sequential fleet step repairing the first broken point (lanes never
+    # drift apart: the shared lambda index k moves in lockstep)
+    use_window = cfg.window > 1
+    force_seq_k = -1
+
     zero_keep = None
-    for k in range(k0, l):
+    k = k0
+    while k < l:
         lam_kB = jnp.asarray(lambdas[:, max(k - 1, 0)], dt)
         lamB = jnp.asarray(lambdas[:, k], dt)
+        W = min(cfg.window, l - k)
+        pre = None            # lane screens prepaid by a declined window
+
+        if use_window and W > 1 and k != force_seq_k:
+            t0 = time.perf_counter()
+            lam_win_np = lambdas[:, k:k + W]
+            if W < cfg.window:
+                # pad tail windows to the compiled window length (`window`
+                # is a jit static) by repeating each lane's last lambda;
+                # padded points converge in ~1 iteration and are discarded
+                # via first_bad <= W
+                lam_win_np = np.concatenate(
+                    [lam_win_np,
+                     np.repeat(lam_win_np[:, -1:], cfg.window - W, axis=1)],
+                    axis=1)
+            lam_winB = jnp.asarray(lam_win_np, dt)
+            if cfg.screen is None:
+                union_maskB = full_maskB
+                ucounts = np.full((B,), p)
+            else:
+                (keep_g0B, keep_v0B, mask0B, union_maskB, ucntB,
+                 cnt0B) = engine.window_screen(gradB, betaB, lam_kB,
+                                               lam_winB, cfg.screen)
+                ucounts = np.asarray(ucntB)      # the one [B] bucket sync
+                pre = (keep_g0B, keep_v0B, mask0B, cnt0B)
+            t_screen += time.perf_counter() - t0
+            max_u = int(ucounts.max())
+            if max_u > 0 and bucket_width(
+                    max_u, p, cfg.bucket_min) <= cfg.window_width_cap:
+                t0 = time.perf_counter()
+                (betaWB, cWB, gradWB, violsWB, nvWB, itersWB, convWB,
+                 diagWB, stepWB) = engine.window_step(
+                    union_maskB, max_u, betaB, cB, gradB, lam_kB, lam_winB)
+                nv = np.asarray(nvWB)            # one [B, W] sync per window
+                t_solve += time.perf_counter() - t0
+                bad = nv > 0
+                first_bad = np.where(bad.any(axis=1), bad.argmax(axis=1),
+                                     nv.shape[1])
+                gp = min(int(first_bad.min()), W)   # padded tail discarded
+                if gp > 0:
+                    bWB, cWnp = np.asarray(betaWB), np.asarray(cWB)
+                    diag_np = np.asarray(diagWB)
+                    it_np, cv_np = np.asarray(itersWB), np.asarray(convWB)
+                    for j in range(gp):
+                        betas[:, k + j, :] = bWB[:, j]
+                        intercepts[:, k + j] = cWnp[:, j]
+                        for b in range(B):
+                            pb, gb = lane_p[b], lane_g[b]
+                            ag, av, cg, cv_, og, ov = (int(x)
+                                                       for x in diag_np[b, j])
+                            if cfg.screen is None:
+                                cg, cv_, og, ov = gb.m, pb, gb.m, pb
+                            mm = metrics[b]
+                            mm["active_g"].append(ag)
+                            mm["active_v"].append(av)
+                            mm["cand_g"].append(cg)
+                            mm["cand_v"].append(cv_)
+                            mm["opt_g"].append(og)
+                            mm["opt_v"].append(ov)
+                            mm["kkt_viols"].append(0)
+                            mm["iters"].append(int(it_np[b, j]))
+                            mm["converged"].append(bool(cv_np[b, j]))
+                            mm["opt_prop_v"].append(ov / pb)
+                            mm["opt_prop_g"].append(og / gb.m)
+                            mm["windowed"].append(True)
+                    j = gp - 1
+                    betaB, cB, gradB = betaWB[:, j], cWB[:, j], gradWB[:, j]
+                    engine.stepB = stepWB[:, j]
+                    k += gp
+                    # state advanced: the prepaid point-0 screens are stale
+                    # (a gp == 0 fall-through keeps them — state untouched)
+                    pre = None
+                if gp < W:
+                    # a lane violated at k+gp: one sequential fleet step
+                    # (its full per-lane KKT loop) repairs it for everyone
+                    force_seq_k = k
+                if gp > 0:
+                    if cfg.verbose:
+                        print(f"[fleet {k - gp:3d}+{gp}/{l}] B={B} window "
+                              f"accepted {gp}/{W}")
+                    continue
+            # declined: fall through to the sequential body for point k
 
         # ---- screening (one vmapped pass for the fleet) ------------------
         t0 = time.perf_counter()
@@ -702,6 +947,9 @@ def fit_fleet_path(fleet: Fleet, lambdas, *, config: FitConfig = None,
                              jnp.zeros((B, p), bool))
             keep_gB, keep_vB = zero_keep
             counts = np.full((B,), p)
+        elif pre is not None:
+            keep_gB, keep_vB, maskB, cnt0B = pre
+            counts = np.asarray(cnt0B)
         else:
             keep_gB, keep_vB, maskB, countB = engine.screen(
                 gradB, betaB, lam_kB, lamB, cfg.screen)
@@ -771,9 +1019,11 @@ def fit_fleet_path(fleet: Fleet, lambdas, *, config: FitConfig = None,
             mm["converged"].append(bool(convB[b]))
             mm["opt_prop_v"].append(ov / pb)
             mm["opt_prop_g"].append(og / gb.m)
+            mm["windowed"].append(False)
         if cfg.verbose:
             print(f"[fleet {k:3d}/{l}] B={B} max|O_v|={int(counts.max())} "
                   f"viols={int(total_viols.sum())}")
+        k += 1
 
     buckets = tuple(sorted(engine.widths))
     results = []

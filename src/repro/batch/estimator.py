@@ -257,7 +257,11 @@ class BatchedSGL:
         for k in ("center", "scale", "v", "w"):
             setattr(est, k + "_", d[k] if k in d else None)
         diag_fields = list(PathDiagnostics.__dataclass_fields__)
+        l = est.lambdas_.shape[1]
+        # pre-window saves lack diag_windowed: sequential by construction
         est.diagnostics_ = [
-            PathDiagnostics(**{f: d[f"diag_{f}"][b] for f in diag_fields})
+            PathDiagnostics(**{f: (d[f"diag_{f}"][b] if f"diag_{f}" in d
+                                   else np.zeros((l,), bool))
+                               for f in diag_fields})
             for b in range(est.n_problems_)]
         return est

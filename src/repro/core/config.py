@@ -66,6 +66,20 @@ class FitConfig:
     dtype: str = "float32"            # float64 needs jax_enable_x64
     # -- engine -------------------------------------------------------------
     bucket_min: int = 8               # smallest power-of-two solver bucket
+    # lambda-window mode: at small screened widths the driver speculatively
+    # screens the next `window` path points against the current gradient and
+    # solves all of them in ONE fused jitted step (a lax.scan chain of
+    # warm-started restricted solves sharing one union bucket), paying one
+    # host sync per window instead of per point.  A per-point KKT audit
+    # inside the step falls back to the sequential driver from the first
+    # violating point, so optimality guarantees are unchanged.  window=1 is
+    # the plain sequential engine; windowing only engages while the union
+    # bucket width stays <= window_width_cap (the small-width regime where
+    # the sequential loop is dispatch-bound).  Neither field lives on
+    # EngineKey: like the bucket width they ride as per-call jit statics on
+    # the windowed step only, and never affect the shared sequential steps.
+    window: int = 1                   # lambda points per fused window step
+    window_width_cap: int = 64        # max union bucket width for windowing
     verbose: bool = False
     # -- batched multi-problem fit (repro.batch) ----------------------------
     batch_max: int = 64               # max problems per compiled fleet chunk
@@ -101,6 +115,10 @@ class FitConfig:
             bad(f"dynamic_every must be >= 1, got {self.dynamic_every}")
         if self.bucket_min < 1:
             bad(f"bucket_min must be >= 1, got {self.bucket_min}")
+        if self.window < 1:
+            bad(f"window must be >= 1, got {self.window}")
+        if self.window_width_cap < 1:
+            bad(f"window_width_cap must be >= 1, got {self.window_width_cap}")
         if self.batch_max < 1:
             bad(f"batch_max must be >= 1, got {self.batch_max}")
         if self.gamma1 < 0 or self.gamma2 < 0:

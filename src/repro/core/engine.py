@@ -72,13 +72,15 @@ def extend_design(X) -> jnp.ndarray:
     return jnp.concatenate([X, jnp.zeros((X.shape[0], 1), X.dtype)], axis=1)
 
 
-@partial(jax.jit, static_argnames=("mode",))
-def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
-                key: EngineKey, *, mode: str):
-    """One fused screening pass -> (keep_groups, keep_vars, opt_mask).
+def _screen_masks(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
+                  key: EngineKey, mode: str):
+    """The one screening-rule dispatch -> (keep_groups, keep_vars).
 
-    ``mode`` stays a separate static because ``gap_dynamic`` re-screens with
-    the plain ``gap`` rule mid-fit under the same config.
+    Shared by :func:`screen_step`, :func:`window_screen_step` and the
+    in-window per-point re-screen of :func:`windowed_path_step`, so every
+    caller runs bit-for-bit the same rule.  ``mode`` and ``prob.loss`` are
+    trace-time statics, so the linear-only guard on the GAP-safe rules is a
+    plain Python raise.
     """
     method, backend = key.eps_method, key.backend
     if mode == "dfr":
@@ -91,11 +93,66 @@ def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
     elif mode == "sparsegl":
         cand = sparsegl_screen(grad, penalty, lam_k, lam_next, backend=backend)
     elif mode in ("gap", "gap_dynamic"):
+        # gap_safe_screen's sphere test is derived for the linear loss; on a
+        # logistic problem it would silently discard wrong variables with no
+        # KKT safety net (gap mode skips the violation loop)
+        if prob.loss != "linear" or penalty.adaptive:
+            raise ValueError(
+                f"screen mode {mode!r} (GAP-safe) is implemented for linear "
+                f"non-adaptive SGL only, got loss={prob.loss!r}, "
+                f"adaptive={penalty.adaptive}")
         cand = gap_safe_screen(prob.X, prob.y, beta, penalty, lam_next, method)
     else:
         raise ValueError(f"unknown screen mode {mode!r}")
-    mask = cand.keep_vars | (beta != 0)
-    return cand.keep_groups, cand.keep_vars, mask
+    return cand.keep_groups, cand.keep_vars
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
+                key: EngineKey, *, mode: str):
+    """One fused screening pass -> (keep_groups, keep_vars, opt_mask).
+
+    ``mode`` stays a separate static because ``gap_dynamic`` re-screens with
+    the plain ``gap`` rule mid-fit under the same config.
+    """
+    keep_groups, keep_vars = _screen_masks(prob, penalty, grad, beta, lam_k,
+                                           lam_next, key, mode)
+    mask = keep_vars | (beta != 0)
+    return keep_groups, keep_vars, mask
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def window_screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_prev,
+                       lam_win, key: EngineKey, *, mode: str):
+    """Speculative union screen for a lambda window.
+
+    Screens every point of ``lam_win`` ([W]) against the CURRENT gradient
+    (the strong-rule anchor stays ``lam_prev``, the last solved point) and
+    returns the union candidate mask — the one shared solve bucket of
+    :func:`windowed_path_step` — plus the first point's own rule masks so a
+    driver that decides against windowing (union bucket over the width cap)
+    has already paid for point k's sequential screen.
+
+    Returns ``(keep_g0, keep_v0, mask0, union_mask, union_count, count0)``.
+    """
+    keep_g0, keep_v0 = _screen_masks(prob, penalty, grad, beta, lam_prev,
+                                     lam_win[0], key, mode)
+    mask0 = keep_v0 | (beta != 0)
+    if mode in ("dfr", "sparsegl"):
+        # both rules are monotone in lam_next at fixed (grad, beta): the
+        # keep threshold 2*lam_next - lam_prev shrinks as lam_next does, so
+        # the smallest (last) window lambda's candidate set IS the union
+        _, keep_vW = _screen_masks(prob, penalty, grad, beta, lam_prev,
+                                   lam_win[-1], key, mode)
+        union = keep_vW | mask0
+    else:
+        # gap-safe has no such monotonicity — take the explicit union
+        kv = jax.vmap(lambda lm: _screen_masks(prob, penalty, grad, beta,
+                                               lam_prev, lm, key, mode)[1]
+                      )(lam_win)
+        union = jnp.any(kv, axis=0) | mask0
+    return (keep_g0, keep_v0, mask0, union,
+            jnp.sum(union), jnp.sum(mask0))
 
 
 @partial(jax.jit, static_argnames=("width", "max_iters", "check_kkt"))
@@ -128,6 +185,89 @@ def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
             res.iters, res.converged, res.step)
 
 
+# within a solve the backtracking step is monotone non-increasing and
+# rounding noise near convergence can over-shrink it; re-growing by bt^-4 at
+# each solve entry (capped at the cold-start 1.0) lets the carried step track
+# the restricted problem's curvature both ways.  Shared by the sequential
+# driver and the in-window warm-start chain so both run identical solves.
+STEP_REGROW = 0.7 ** -4
+
+
+@partial(jax.jit, static_argnames=("width", "window", "max_iters", "mode"))
+def windowed_path_step(prob: Problem, Xp, penalty: Penalty, union_mask, beta,
+                       c, grad, lam_prev, lam_win, step0, tol,
+                       key: EngineKey, *, width: int, window: int,
+                       max_iters: int, mode):
+    """Solve ``window`` consecutive path points in ONE fused jitted step.
+
+    A ``lax.scan`` over the lambda axis chains the sequential per-point
+    program — screen (against the previous point's gradient, exactly the
+    rule :func:`screen_step` applies), restricted solve warm-started on the
+    previous point's (beta, intercept, step), full gradient, KKT audit —
+    with ONE on-device gather shared by the whole window: the union
+    candidate bucket from :func:`window_screen_step`.  Each point solves its
+    OWN optimization set by zeroing the gathered columns outside its mask
+    (a zero column's gradient coordinate is exactly 0, so its prox output
+    stays exactly 0 — the coordinate is frozen without touching the
+    solver), which keeps the windowed iterates identical to the sequential
+    engine's up to float association in the shared-bucket contractions.
+
+    The audit marks violations OUTSIDE each point's solved set
+    ``mask_j & union`` — this covers both true strong-rule misses and
+    in-window re-screens that grew past the speculative union — and the
+    audit always runs (even for exact/no-screen modes, where it is the
+    window's only correctness signal).  The driver accepts the prefix of
+    violation-free points and falls back to the sequential step from the
+    first violating point, so optimality guarantees are unchanged.
+
+    Returns per-point stacks ``(betas [W,p], intercepts [W], grads [W,p],
+    viols [W,p], nviols [W], iters [W], conv [W], keep_g [W,m],
+    keep_v [W,p], masks [W,p], steps [W])``.  ``steps`` is per point so the
+    driver can resume the warm-start chain from the last ACCEPTED point —
+    a discarded speculative solve must not leak into later step sizes.
+    """
+    p, m = prob.p, penalty.g.m
+    dt = beta.dtype
+    idx_pad = jnp.nonzero(union_mask, size=width, fill_value=p)[0]
+    Xs = Xp[:, idx_pad]                                   # the ONE gather
+    pen_sub = restrict_penalty(penalty, union_mask, idx_pad, width)
+    mask_ext_false = jnp.zeros((1,), bool)
+    beta_sub0 = jnp.concatenate([beta, jnp.zeros((1,), dt)])[idx_pad]
+
+    def body(carry, lam_j):
+        beta_sub, c_k, grad_k, beta_full, lam_k, step = carry
+        if mode is None:
+            keep_g = jnp.ones((m,), bool)
+            keep_v = jnp.ones((p,), bool)
+            mask_j = jnp.ones((p,), bool)
+        else:
+            keep_g, keep_v = _screen_masks(prob, penalty, grad_k, beta_full,
+                                           lam_k, lam_j, key, mode)
+            mask_j = keep_v | (beta_full != 0)
+        sub_mask = jnp.concatenate([mask_j, mask_ext_false])[idx_pad]
+        Xs_j = jnp.where(sub_mask[None, :], Xs, jnp.zeros((), Xs.dtype))
+        prob_sub = Problem(Xs_j, prob.y, prob.loss, prob.intercept)
+        step0_j = jnp.minimum(step * STEP_REGROW, 1.0)
+        res = solve(prob_sub, pen_sub, lam_j,
+                    beta0=jnp.where(sub_mask, beta_sub, 0.0), c0=c_k,
+                    config=key, max_iters=max_iters, tol=tol, step0=step0_j)
+        beta_full_j = jnp.zeros((p + 1,), dt).at[idx_pad].set(res.beta)[:p]
+        eta = Xs_j @ res.beta
+        solved = mask_j & union_mask
+        grad_j, viols = kkt_check_from_eta(prob, penalty, eta, res.intercept,
+                                           lam_j, solved, check=True,
+                                           backend=key.backend)
+        out = (beta_full_j, res.intercept, grad_j, viols, jnp.sum(viols),
+               res.iters, res.converged, keep_g, keep_v, mask_j, res.step)
+        return (res.beta, res.intercept, grad_j, beta_full_j, lam_j,
+                res.step), out
+
+    carry0 = (beta_sub0, jnp.asarray(c, dt), grad, beta,
+              jnp.asarray(lam_prev, dt), jnp.asarray(step0, dt))
+    _, outs = jax.lax.scan(body, carry0, lam_win, length=window)
+    return outs
+
+
 @partial(jax.jit, static_argnames=("check_kkt",))
 def null_path_step(prob: Problem, penalty: Penalty, c, lam, mask,
                    key: EngineKey, *, check_kkt: bool):
@@ -157,6 +297,11 @@ class PathEngine:
     def __init__(self, prob: Problem, penalty: Penalty,
                  config: FitConfig = None, *, Xp=None, **legacy):
         self.config = FitConfig.from_kwargs(config, **legacy)
+        # cross-field guard at the ENGINE boundary too, not just fit_path:
+        # a PathEngine built directly with screen="gap" on a logistic (or
+        # adaptive) problem would run the linear-only sphere test silently
+        # wrong, with no KKT loop to repair it
+        self.config.validate_for(prob.loss, penalty.adaptive)
         self.key = self.config.engine_key
         self.prob = prob
         self.penalty = penalty
@@ -172,11 +317,7 @@ class PathEngine:
                              f"{(prob.n, prob.p + 1)}, got {Xp.shape}")
         self.Xp = Xp
         self.step_size = jnp.asarray(1.0, dt)   # warm start across path points
-        # within a solve the backtracking step is monotone non-increasing and
-        # rounding noise near convergence can over-shrink it; re-growing by
-        # bt^-4 at each solve entry (capped at the cold-start 1.0) lets the
-        # carried step track the restricted problem's curvature both ways
-        self.step_regrow = 0.7 ** -4
+        self.step_regrow = STEP_REGROW          # see the constant's comment
         self.widths: set = set()
 
     def gradient(self, beta, c):
@@ -202,3 +343,31 @@ class PathEngine:
     def null_step(self, c, lam, mask, check_kkt: bool = True):
         return null_path_step(self.prob, self.penalty, c, lam, mask,
                               self.key, check_kkt=check_kkt)
+
+    # -- lambda-window mode --------------------------------------------------
+
+    def window_screen(self, grad, beta, lam_prev, lam_win, mode: str):
+        """Union candidate screen over a window -> also point 0's masks."""
+        dt = self.prob.X.dtype
+        return window_screen_step(self.prob, self.penalty, grad, beta,
+                                  jnp.asarray(lam_prev, dt),
+                                  jnp.asarray(lam_win, dt),
+                                  self.key, mode=mode)
+
+    def window_step(self, union_mask, count: int, beta, c, grad, lam_prev,
+                    lam_win):
+        """One fused multi-point step over ``len(lam_win)`` lambdas.
+
+        Does NOT advance ``step_size`` — the driver commits the per-point
+        step of the last accepted point (discarded speculative solves must
+        not leak into the warm-start chain).
+        """
+        dt = self.prob.X.dtype
+        width = bucket_width(count, self.prob.p, self.config.bucket_min)
+        self.widths.add(width)
+        return windowed_path_step(
+            self.prob, self.Xp, self.penalty, union_mask, beta, c, grad,
+            jnp.asarray(lam_prev, dt), jnp.asarray(lam_win, dt),
+            self.step_size, self.config.tol, self.key, width=width,
+            window=len(lam_win), max_iters=self.config.max_iters,
+            mode=self.config.screen)

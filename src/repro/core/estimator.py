@@ -90,7 +90,11 @@ class SGL:
     lambdas : optional explicit lambda grid (else lambda_1 -> term*lambda_1).
     config : FitConfig, optional
         Full fit configuration; remaining keyword arguments are folded into
-        it, e.g. ``SGL(g, screen="sparsegl", backend="pallas", tol=1e-6)``.
+        it, e.g. ``SGL(g, screen="sparsegl", backend="pallas", tol=1e-6)``
+        or ``SGL(g, window=8)`` to batch path points through the fused
+        lambda-window engine at small screened widths (identical solutions;
+        ``diagnostics_.window_hit_rate`` reports how much of the path
+        actually windowed).
 
     Fitted attributes: ``lambdas_`` [l], ``coef_path_`` [l, p] (original
     column scale), ``intercept_path_`` [l], ``diagnostics_``
@@ -316,7 +320,12 @@ class SGL:
         self.groups = self.groups_
         for k in ("center", "scale", "v", "w"):
             setattr(self, k + "_", d[k] if k in d else None)
-        diag = {f: d[f"diag_{f}"] for f in PathDiagnostics.__dataclass_fields__}
+        l = len(self.lambdas_)
+        # saves from before the lambda-window engine lack diag_windowed:
+        # those paths were sequential by construction
+        diag = {f: (d[f"diag_{f}"] if f"diag_{f}" in d
+                    else np.zeros((l,), bool))
+                for f in PathDiagnostics.__dataclass_fields__}
         self.diagnostics_ = PathDiagnostics(**diag)
         self._device_path = None
 

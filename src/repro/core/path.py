@@ -10,6 +10,14 @@ restricted solve, and the KKT-violation audit run as a single fused jitted
 step per (mode, bucket).  Host syncs per path point: the bucket-width
 decision (one int) plus one violation count per KKT round.
 
+With ``FitConfig.window > 1`` the driver additionally fuses whole RUNS of
+path points while the screened bucket stays small
+(``<= window_width_cap``): a speculative union screen, then one jitted
+``lax.scan`` chaining the per-point program over a shared union bucket —
+one sync per *window* instead of per point, identical solutions (the first
+KKT-violating point falls back to the sequential body; see
+``engine.windowed_path_step``).
+
 Configuration lives on one :class:`~repro.core.config.FitConfig` (a static
 pytree node — the engine's compile-cache keys derive from its hash):
 
@@ -45,7 +53,7 @@ import numpy as np
 
 from .adaptive import asgl_path_start
 from .config import FitConfig
-from .engine import PathEngine
+from .engine import PathEngine, bucket_width
 from .groups import GroupInfo
 from .losses import Problem, gradient, residual
 from .penalties import Penalty, sgl_dual_norm
@@ -91,7 +99,8 @@ def lambda_path(lam1, length: int = 50, term: float = 0.1) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 _DIAG_FIELDS = ("active_g", "cand_g", "opt_g", "active_v", "cand_v", "opt_v",
-                "kkt_viols", "iters", "converged", "opt_prop_v", "opt_prop_g")
+                "kkt_viols", "iters", "converged", "opt_prop_v", "opt_prop_g",
+                "windowed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,12 +123,23 @@ class PathDiagnostics:
     converged: np.ndarray       # [l] bool
     opt_prop_v: np.ndarray      # [l] float — |O_v| / p (the paper's "input prop")
     opt_prop_g: np.ndarray      # [l] float — |O_g| / m
+    windowed: np.ndarray        # [l] bool  — point solved inside an accepted
+    #                             lambda window (FitConfig.window > 1) rather
+    #                             than by a per-point sequential step; the
+    #                             mean is the window hit-rate (see
+    #                             ``window_hit_rate``) — low values mean the
+    #                             path left the small-width regime early or
+    #                             KKT fallbacks kept breaking windows
 
     @classmethod
     def from_lists(cls, d: dict) -> "PathDiagnostics":
         kinds = {"converged": bool, "opt_prop_v": np.float64,
-                 "opt_prop_g": np.float64}
-        return cls(**{k: np.asarray(d[k], dtype=kinds.get(k, np.int64))
+                 "opt_prop_g": np.float64, "windowed": bool}
+        length = len(d["active_v"])
+        # pre-window recorders (the pinned seed driver) have no "windowed"
+        defaults = {"windowed": [False] * length}
+        return cls(**{k: np.asarray(d.get(k, defaults.get(k)),
+                                    dtype=kinds.get(k, np.int64))
                       for k in _DIAG_FIELDS})
 
     # -- dict-of-lists backward compatibility -------------------------------
@@ -137,11 +157,19 @@ class PathDiagnostics:
     def __len__(self) -> int:
         return len(self.active_v)
 
+    @property
+    def window_hit_rate(self) -> float:
+        """Fraction of path points solved inside an accepted lambda window
+        (0.0 for sequential fits / ``window=1``)."""
+        return float(self.windowed.mean()) if len(self) else 0.0
+
     def summary(self) -> str:
         """One line: screening effectiveness + solver effort over the path."""
         n = len(self)
         if n == 0:
             return "PathDiagnostics: empty path"
+        win = (f" | window hit-rate {self.window_hit_rate:.2f}"
+               if self.windowed.any() else "")
         return (f"PathDiagnostics: {n} points | input prop "
                 f"{self.opt_prop_v.mean():.3f} (vars) / "
                 f"{self.opt_prop_g.mean():.3f} (groups) | "
@@ -149,7 +177,7 @@ class PathDiagnostics:
                 f"{int(self.iters.sum())} solver iters | "
                 f"{int(self.converged.sum())}/{n} converged | "
                 f"final active {int(self.active_v[-1])} vars in "
-                f"{int(self.active_g[-1])} groups")
+                f"{int(self.active_g[-1])} groups" + win)
 
 
 @dataclasses.dataclass
@@ -181,7 +209,7 @@ def _metrics_init():
 
 
 def _record(metrics, g: GroupInfo, beta, cand: Optional[ScreenResult], opt_mask,
-            viols, iters, conv):
+            viols, iters, conv, windowed: bool = False):
     beta = np.asarray(beta)
     gid = np.asarray(g.group_id)
     active_v = beta != 0
@@ -200,6 +228,7 @@ def _record(metrics, g: GroupInfo, beta, cand: Optional[ScreenResult], opt_mask,
     metrics["converged"].append(bool(conv))
     metrics["opt_prop_v"].append(float(np.asarray(opt_mask).mean()))
     metrics["opt_prop_g"].append(float(opt_g.mean()))
+    metrics["windowed"].append(bool(windowed))
 
 
 # ---------------------------------------------------------------------------
@@ -265,14 +294,92 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
         intercepts[0] = float(c)
         _record(metrics, penalty.g, betas[0], None, np.zeros((p,), bool), 0, 0, True)
 
-    for k in range(k0, l):
+    # lambda-window mode: while the union candidate bucket stays small
+    # (<= window_width_cap), solve the next `window` points in one fused
+    # step — one host sync per window instead of per point — and fall back
+    # to the sequential per-point body from the first KKT-violating point.
+    # gap_dynamic never windows: its mid-solve re-screen loop is
+    # host-adaptive per point.
+    use_window = cfg.window > 1 and cfg.screen != "gap_dynamic"
+    force_seq_k = -1          # point that must run sequentially (fallback)
+
+    k = k0
+    while k < l:
         lam_k, lam = lambdas[max(k - 1, 0)], lambdas[k]
+        W = min(cfg.window, l - k)
+        pre = None            # point-k screen prepaid by a declined window
+
+        if use_window and W > 1 and k != force_seq_k:
+            t0 = time.perf_counter()
+            lam_win = lambdas[k:k + W]
+            if W < cfg.window:
+                # pad tail windows to the compiled window length by
+                # repeating the last lambda: `window` is a jit static, so a
+                # shorter tail would otherwise compile a whole new scan; the
+                # duplicate points warm-start at their own solution
+                # (converging in ~1 iteration) and their outputs are
+                # discarded below via first_bad <= W
+                lam_win = np.concatenate(
+                    [lam_win, np.full(cfg.window - W, lam_win[-1])])
+            if cfg.screen is None:
+                union_mask, ucount = full_mask, p
+            else:
+                (keep_g0, keep_v0, mask0, union_mask, ucnt_d,
+                 cnt0_d) = engine.window_screen(grad, beta, lam_k, lam_win,
+                                                cfg.screen)
+                ucount = int(ucnt_d)          # the one bucket-decision sync
+                pre = (ScreenResult(keep_g0, keep_v0), mask0, cnt0_d)
+            t_screen += time.perf_counter() - t0
+            if ucount > 0 and bucket_width(
+                    ucount, p, cfg.bucket_min) <= cfg.window_width_cap:
+                t0 = time.perf_counter()
+                (betasW, csW, gradsW, violsW, nvW, itersW, convW, kgW, kvW,
+                 masksW, stepsW) = engine.window_step(
+                    union_mask, ucount, beta, c, grad, lam_k, lam_win)
+                nv = np.asarray(nvW)          # the one per-window KKT sync
+                t_solve += time.perf_counter() - t0
+                first_bad = int(np.argmax(nv > 0)) if nv.any() else len(nv)
+                first_bad = min(first_bad, W)  # padded tail points discarded
+                if first_bad > 0:
+                    bW, cWnp = np.asarray(betasW), np.asarray(csW)
+                    kg, kv = np.asarray(kgW), np.asarray(kvW)
+                    mk = np.asarray(masksW)
+                    it_np, cv_np = np.asarray(itersW), np.asarray(convW)
+                    for j in range(first_bad):
+                        betas[k + j] = bW[j]
+                        intercepts[k + j] = cWnp[j]
+                        _record(metrics, penalty.g, bW[j],
+                                ScreenResult(kg[j], kv[j]), mk[j], 0,
+                                it_np[j], cv_np[j], windowed=True)
+                        if cfg.verbose:
+                            print(f"[path {k + j:3d}/{l}] "
+                                  f"lam={lambdas[k + j]:.4g} "
+                                  f"|O_v|={int(mk[j].sum())} "
+                                  f"iters={int(it_np[j])} viols=0 (window)")
+                    j = first_bad - 1
+                    beta, c, grad = betasW[j], csW[j], gradsW[j]
+                    engine.step_size = stepsW[j]
+                    k += first_bad
+                    # the carried state advanced: the prepaid point-0 screen
+                    # is stale (a first_bad == 0 fall-through keeps it — the
+                    # state is untouched, so it is still point k's screen)
+                    pre = None
+                if first_bad < W:
+                    force_seq_k = k    # sequential KKT loop repairs it
+                if first_bad > 0:
+                    continue
+            # declined (union bucket over the cap) or all-null window: fall
+            # through to the sequential body — `pre` carries point k's
+            # already-computed screen so nothing is paid twice
 
         # ---- screening --------------------------------------------------
         t0 = time.perf_counter()
         cand = None
         if cfg.screen is None:
             mask, count = full_mask, p
+        elif pre is not None:
+            cand, mask, cnt0_d = pre
+            count = int(cnt0_d)
         else:
             keep_g, keep_v, mask = engine.screen(grad, beta, lam_k, lam,
                                                  cfg.screen)
@@ -325,6 +432,7 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
         if cfg.verbose:
             print(f"[path {k:3d}/{l}] lam={lam:.4g} |O_v|={count} "
                   f"iters={int(res_iters)} viols={total_viols}")
+        k += 1
 
     return PathResult(lambdas, betas, intercepts, metrics, t_screen, t_solve,
                       buckets=tuple(sorted(engine.widths)))

@@ -1,12 +1,14 @@
 """Batched multi-problem fit engine: vmapped fleet vs sequential fit_path
-equivalence (both losses, all supported screen modes), scheduler bucketing
-properties, batched estimator save/load round-trips, and fit-on-demand."""
+equivalence (both losses, all supported screen modes), the fleet
+lambda-window mode, scheduler bucketing properties (hypothesis), batched
+estimator save/load round-trips, and fit-on-demand."""
 import os
 import tempfile
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
+from hypothesis import given, settings, strategies as st
 from jax.experimental import enable_x64
 
 from repro.core import (GroupInfo, Penalty, Problem, fit_path, pca_weights,
@@ -167,6 +169,86 @@ def test_fleet_user_grids():
 
 
 # ---------------------------------------------------------------------------
+# fleet lambda-window mode: windowed == sequential
+# ---------------------------------------------------------------------------
+
+def test_fleet_windowed_matches_sequential_16_lanes_x64():
+    """The [B] problem axis composed with the [W] window axis: a 16-lane
+    windowed fleet matches the window=1 fleet AND per-problem fit_path to
+    <1e-10 in x64."""
+    X, Y, g, alphas = shared_problems(B=16, n=50, p=96, m=8)
+    with enable_x64():
+        cfg = FitConfig(screen="dfr", length=8, term=0.2, tol=1e-12,
+                        dtype="float64")
+        cfgw = cfg.replace(window=4, window_width_cap=256)
+        grids = shared_fleet_lambda_grids(X, Y, g, alphas, config=cfg,
+                                          dtype=jnp.float64)
+        fleet = make_shared_fleet(X, Y, g, alphas, dtype=jnp.float64)
+        fr1 = fit_fleet_path(fleet, grids, config=cfg, user_grid=False)
+        frw = fit_fleet_path(fleet, grids, config=cfgw, user_grid=False)
+        dev = 0.0
+        for b in range(16):
+            dev = max(dev, float(np.max(np.abs(
+                fr1.results[b].betas - frw.results[b].betas))))
+            prob = Problem(jnp.asarray(X, jnp.float64),
+                           jnp.asarray(Y[b], jnp.float64), "linear", True)
+            r = fit_path(prob, Penalty(g, float(alphas[b])), config=cfgw)
+            dev = max(dev, float(np.max(np.abs(
+                r.betas - frw.results[b].betas))))
+    assert dev < 1e-10, dev
+    hit = np.mean([frw.results[b].diagnostics.window_hit_rate
+                   for b in range(16)])
+    assert hit > 0.5, hit
+    assert all(not np.asarray(fr1.results[b].metrics["windowed"]).any()
+               for b in range(16))
+
+
+@pytest.mark.parametrize("mode", ["sparsegl", "gap", None])
+def test_fleet_windowed_matches_sequential_other_modes(mode):
+    X, Y, g, alphas = shared_problems(B=4, seed=21)
+    with enable_x64():
+        cfg = FitConfig(screen=mode, length=6, term=0.25, tol=1e-12,
+                        dtype="float64")
+        grids = shared_fleet_lambda_grids(X, Y, g, alphas, config=cfg,
+                                          dtype=jnp.float64)
+        fleet = make_shared_fleet(X, Y, g, alphas, dtype=jnp.float64)
+        fr1 = fit_fleet_path(fleet, grids, config=cfg, user_grid=False)
+        frw = fit_fleet_path(fleet, grids,
+                             config=cfg.replace(window=3,
+                                                window_width_cap=256),
+                             user_grid=False)
+    dev = max(float(np.max(np.abs(fr1.results[b].betas
+                                  - frw.results[b].betas)))
+              for b in range(4))
+    assert dev < 1e-10, (mode, dev)
+
+
+def test_fleet_windowed_heterogeneous_buckets():
+    """Window mode through the scheduler's padded stacked buckets (row
+    padding + padding group must stay frozen inside windows too)."""
+    rng = np.random.default_rng(22)
+    reqs, refs = [], []
+    for i, (n, m, gs) in enumerate([(40, 8, 9), (50, 10, 11), (40, 8, 9)]):
+        g = GroupInfo.from_sizes([gs] * m)
+        X = standardize(rng.normal(size=(n, g.p)))
+        beta = np.zeros(g.p)
+        beta[:5] = rng.normal(0, 2, 5)
+        y = X @ beta + 0.3 * rng.normal(size=n)
+        reqs.append(FitRequest(X, y, g, alpha=0.7 + 0.05 * i))
+        refs.append((X, y, g, 0.7 + 0.05 * i))
+    with enable_x64():
+        cfg = FitConfig(screen="dfr", length=6, term=0.25, tol=1e-12,
+                        dtype="float64", window=3, window_width_cap=256)
+        results = fit_fleet(reqs, cfg)
+        for i, (X, y, g, a) in enumerate(refs):
+            prob = Problem(jnp.asarray(X, jnp.float64),
+                           jnp.asarray(y, jnp.float64), "linear", True)
+            r = fit_path(prob, Penalty(g, a), config=cfg)
+            dev = float(np.max(np.abs(r.betas - results[i].betas)))
+            assert dev < 1e-10, (i, dev)
+
+
+# ---------------------------------------------------------------------------
 # scheduler bucketing properties
 # ---------------------------------------------------------------------------
 
@@ -241,6 +323,87 @@ def test_scheduler_shared_design_detection():
 def test_pow2_ceil():
     assert [pow2_ceil(x) for x in (1, 2, 3, 7, 8, 9)] == [1, 2, 4, 8, 8, 16]
     assert pow2_ceil(3, minimum=8) == 8
+
+
+def _random_requests(seed, count):
+    """Heterogeneous request set: ragged shapes, some shape twins, and some
+    lanes sharing the same X object (shared-design detection)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    shared = None
+    grid = np.array([0.5, 0.4, 0.3])       # explicit grids: no path_start
+    for i in range(count):
+        kind = int(rng.integers(3))
+        if kind == 0 and shared is not None:
+            X, g = shared                   # same array object -> shared fleet
+        else:
+            m = int(rng.integers(2, 7))
+            gs = int(rng.integers(2, 9))
+            n = int(rng.integers(9, 70))
+            g = GroupInfo.from_sizes([gs] * m)
+            X = rng.normal(size=(n, g.p))
+            if kind == 1:
+                shared = (X, g)
+        reqs.append(FitRequest(X, rng.normal(size=X.shape[0]), g, alpha=0.9,
+                               lambdas=grid))
+    return reqs
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 14), st.integers(2, 8),
+       st.booleans())
+def test_property_scheduler_assigns_every_request_exactly_once(
+        seed, count, batch_max, batch_pad):
+    reqs = _random_requests(seed, count)
+    cfg = FitConfig(batch_max=batch_max, batch_pad=batch_pad)
+    buckets = build_fleets(reqs, cfg)
+    from collections import Counter
+    owner = Counter()
+    for b in buckets:
+        for i in set(b.indices):
+            owner[i] += 1
+    assert sorted(owner) == list(range(count))
+    assert all(c == 1 for c in owner.values()), owner
+    for b in buckets:
+        # chunk sizes respect batch_max even after pow2 padding
+        assert len(b.indices) <= batch_max
+        # lane-0 dup-drop safety: any duplicated lane is a copy of lane 0,
+        # so dropping duplicates after the fit can never lose a request
+        seen = set()
+        for j, i in enumerate(b.indices):
+            if i in seen:
+                assert i == b.indices[0], (j, b.indices)
+            seen.add(i)
+        if batch_pad:
+            B = b.fleet.B
+            assert B & (B - 1) == 0, B
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 12))
+def test_property_scheduler_padded_shapes_pow2_and_minimal(seed, count):
+    reqs = _random_requests(seed, count)
+    buckets = build_fleets(reqs, FitConfig(batch_max=4))
+    for b in buckets:
+        if b.shared_design:
+            # shared/singleton fleets are UNPADDED: exact problem shapes
+            r0 = reqs[b.indices[0]]
+            assert b.fleet.p == r0.groups.p
+            assert b.fleet.n == r0.y.shape[0]
+            continue
+        n_pad, p_pad, m_pad, ms_pad = b.signature[:4]
+        for v in (n_pad, p_pad, m_pad, ms_pad):
+            assert v & (v - 1) == 0, b.signature
+        for i in set(b.indices):
+            r = reqs[i]
+            g = r.groups
+            # pow2 AND minimal: the bucket shape is exactly each member's
+            # own pow2 ceiling (floors: 8 rows/cols, +1 col and +1 group of
+            # padding headroom)
+            assert n_pad == pow2_ceil(r.y.shape[0], 8)
+            assert p_pad == pow2_ceil(g.p + 1, 8)
+            assert m_pad == pow2_ceil(g.m + 1)
+            assert ms_pad == pow2_ceil(max(g.max_size, 1))
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,16 @@
 """Device-resident path engine: equivalence with the seed driver, the
-kernel (pallas) backend, restricted-penalty construction, and batched CV."""
+kernel (pallas) backend, restricted-penalty construction, batched CV, and
+the lambda-window fused engine (windowed == sequential, fallback on
+mid-window KKT violations)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+from jax.experimental import enable_x64
 
 from repro.core import (GroupInfo, Penalty, Problem, cv_fit_path, fit_path,
                         pca_weights, restrict_penalty, standardize)
-from repro.core.engine import bucket_width
+from repro.core.config import FitConfig
+from repro.core.engine import PathEngine, bucket_width
 from repro.core.path_reference import fit_path_reference
 
 
@@ -165,6 +169,192 @@ def test_user_lambda_grid_solves_first_point():
     r2 = fit_path(prob, pen, lambdas=np.array([lam1, 0.5 * lam1, 0.3 * lam1]),
                   screen="dfr", tol=1e-6)
     assert np.max(np.abs(r.betas[0] - r2.betas[1])) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# lambda-window fused engine: windowed == sequential
+# ---------------------------------------------------------------------------
+
+def synth64(seed=0, n=60, p=120, m=12, loss="linear"):
+    prob, g = synth(seed=seed, n=n, p=p, m=m, loss=loss)
+    return (Problem(jnp.asarray(prob.X, jnp.float64),
+                    jnp.asarray(prob.y, jnp.float64), loss, True), g)
+
+
+@pytest.mark.parametrize("loss,mode", [
+    ("linear", "dfr"), ("linear", "sparsegl"), ("linear", "gap"),
+    ("linear", "gap_dynamic"), ("linear", None),
+    ("logistic", "dfr"), ("logistic", "sparsegl"), ("logistic", None)])
+def test_windowed_path_matches_sequential(loss, mode):
+    """The acceptance bar: whole-path betas of a windowed fit match the
+    window=1 (sequential) fit to <1e-10 in x64 — every screen mode, both
+    losses.  (gap_dynamic never windows by design; it must be a no-op.)"""
+    with enable_x64():
+        prob, g = synth64(loss=loss)
+        pen = Penalty(g, 0.95)
+        base = FitConfig(screen=mode, length=10, term=0.2, tol=1e-12,
+                         dtype="float64")
+        r1 = fit_path(prob, pen, config=base)
+        rw = fit_path(prob, pen, config=base.replace(window=4,
+                                                     window_width_cap=256))
+    assert np.max(np.abs(r1.betas - rw.betas)) < 1e-10, (loss, mode)
+    assert np.max(np.abs(r1.intercepts - rw.intercepts)) < 1e-10
+    assert not np.asarray(r1.metrics["windowed"]).any()
+    if mode == "gap_dynamic":
+        assert rw.diagnostics.window_hit_rate == 0.0
+    else:
+        assert rw.diagnostics.window_hit_rate > 0.5, rw.diagnostics.summary()
+
+
+def test_windowed_path_matches_sequential_asgl():
+    with enable_x64():
+        prob, g = synth64(seed=3)
+        v, w = pca_weights(prob.X, g, 0.1, 0.1)
+        pen = Penalty(g, 0.95, v, w)
+        base = FitConfig(screen="dfr", length=10, term=0.2, tol=1e-12,
+                         dtype="float64", adaptive=True)
+        r1 = fit_path(prob, pen, config=base)
+        rw = fit_path(prob, pen, config=base.replace(window=4,
+                                                     window_width_cap=256))
+    assert np.max(np.abs(r1.betas - rw.betas)) < 1e-10
+    assert rw.diagnostics.window_hit_rate > 0.5
+
+
+def strong_rule_violation_problem(seed=0, n=40):
+    """A case engineered to make the DFR/strong rule provably mis-screen:
+    x1, x2 are near-collinear and enter with opposite signs, so the fitted
+    direction (x1 - x2) has leverage ||(X_A'X_A)^-1|| >> 1; x3 is aligned
+    with that direction but built exactly orthogonal to y (cancellation
+    against a second y component), so its gradient is ~0 until the pair
+    activates and then ramps at slope >> 1 — violating the unit-slope
+    assumption behind the 2*lam' - lam threshold."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=n); a /= np.linalg.norm(a)
+    e1, e2 = rng.normal(size=n), rng.normal(size=n)
+    x1 = a + 0.08 * e1 / np.linalg.norm(e1)
+    x2 = a - 0.08 * e2 / np.linalg.norm(e2)
+    d = x1 - x2
+    dh = d / np.linalg.norm(d)
+    w = rng.normal(size=n)
+    w -= dh * (dh @ w)
+    w -= a * (a @ w) / (a @ a)
+    wh = w / np.linalg.norm(w)
+    y = dh + wh
+    q = rng.normal(size=n)
+    for v in (dh, wh, a):
+        q -= v * (v @ q) / (v @ v)
+    x3 = 0.5 * dh - 0.5 * wh + 0.05 * q / np.linalg.norm(q)
+    X = standardize(np.column_stack([x1, x2, x3,
+                                     0.2 * rng.normal(size=(n, 5))]))
+    y = y - y.mean()
+    g = GroupInfo.from_sizes([1] * X.shape[1])
+    prob = Problem(jnp.asarray(X, jnp.float64), jnp.asarray(y, jnp.float64),
+                   "linear", True)
+    return prob, g
+
+
+def test_windowed_kkt_violation_fallback():
+    """Mid-window KKT violation: the windowed engine must fall back to the
+    sequential step from the first violating point — identical betas,
+    identical recorded violations, and a window hit-rate < 1 with the
+    violating point marked non-windowed."""
+    with enable_x64():
+        prob, g = strong_rule_violation_problem()
+        pen = Penalty(g, 1.0)
+        base = FitConfig(screen="dfr", length=30, term=0.05, tol=1e-12,
+                         dtype="float64")
+        r1 = fit_path(prob, pen, config=base)
+        viols = np.asarray(r1.metrics["kkt_viols"])
+        assert viols.sum() > 0, "construction must trigger a KKT violation"
+        k_viol = int(np.where(viols > 0)[0][0])
+        rw = fit_path(prob, pen, config=base.replace(window=4,
+                                                     window_width_cap=64))
+    assert np.max(np.abs(r1.betas - rw.betas)) < 1e-10
+    np.testing.assert_array_equal(viols, np.asarray(rw.metrics["kkt_viols"]))
+    wn = np.asarray(rw.metrics["windowed"])
+    assert not wn[k_viol]                  # the fallback point ran sequential
+    assert wn[:k_viol].any() and wn[k_viol + 1:].any()   # windows around it
+    assert 0.0 < rw.diagnostics.window_hit_rate < 1.0
+
+
+@pytest.mark.parametrize("kw", [dict(backend="pallas"), dict(solver="atos")])
+def test_windowed_path_other_engines_smoke(kw):
+    """Window mode composes with the pallas backend and the atos solver
+    (f32 rounding-level agreement with their sequential runs)."""
+    prob, g = synth(seed=8)
+    pen = Penalty(g, 0.95)
+    base = FitConfig(screen="dfr", length=8, term=0.25, tol=1e-6, **kw)
+    r1 = fit_path(prob, pen, config=base)
+    rw = fit_path(prob, pen, config=base.replace(window=4,
+                                                 window_width_cap=128))
+    assert np.max(np.abs(r1.betas - rw.betas)) < 5e-5, kw
+    assert rw.diagnostics.window_hit_rate > 0.5
+
+
+def test_window_width_cap_gates_windowing():
+    """Above the cap the engine must never window (pure sequential), and the
+    result is unchanged either way."""
+    prob, g = synth(seed=4)
+    pen = Penalty(g, 0.95)
+    base = FitConfig(screen="dfr", length=8, term=0.2, tol=1e-6)
+    r1 = fit_path(prob, pen, config=base)
+    r_off = fit_path(prob, pen, config=base.replace(window=4,
+                                                    window_width_cap=1))
+    assert r_off.diagnostics.window_hit_rate == 0.0
+    np.testing.assert_array_equal(r1.betas, r_off.betas)
+
+
+def test_window_config_validation_and_statics():
+    with pytest.raises(ValueError, match="window"):
+        FitConfig(window=0)
+    with pytest.raises(ValueError, match="window_width_cap"):
+        FitConfig(window_width_cap=0)
+    # window knobs are per-call statics on the windowed step only — they
+    # must NOT enter EngineKey (the shared sequential steps' cache key)
+    a = FitConfig().engine_key
+    b = FitConfig(window=8, window_width_cap=256).engine_key
+    assert a == b
+
+
+def test_window_survives_config_roundtrip():
+    cfg = FitConfig(window=8, window_width_cap=128)
+    assert FitConfig.from_json(cfg.to_json()) == cfg
+
+
+# ---------------------------------------------------------------------------
+# GAP-safe loss guard (regression: engine-level entry points must reject
+# logistic/adaptive problems, not just fit_path)
+# ---------------------------------------------------------------------------
+
+def test_path_engine_rejects_gap_on_logistic():
+    prob, g = synth(seed=5, loss="logistic")
+    pen = Penalty(g, 0.9)
+    for mode in ("gap", "gap_dynamic"):
+        with pytest.raises(ValueError, match="linear"):
+            PathEngine(prob, pen, FitConfig(screen=mode))
+        with pytest.raises(ValueError, match="linear"):
+            fit_path(prob, pen, screen=mode, length=3)
+
+
+def test_screen_step_rejects_gap_on_logistic():
+    """Even the raw jitted step guards: mode='gap' + a logistic problem is
+    a trace-time error, not a silently wrong sphere test."""
+    from repro.core.engine import screen_step
+    prob, g = synth(seed=6, loss="logistic")
+    pen = Penalty(g, 0.9)
+    grad = jnp.zeros((prob.p,), prob.X.dtype)
+    beta = jnp.zeros((prob.p,), prob.X.dtype)
+    with pytest.raises(ValueError, match="linear"):
+        screen_step(prob, pen, grad, beta, 0.1, 0.08,
+                    FitConfig().engine_key, mode="gap")
+
+
+def test_path_engine_rejects_gap_on_adaptive():
+    prob, g = synth(seed=7)
+    v, w = pca_weights(prob.X, g, 0.1, 0.1)
+    pen = Penalty(g, 0.9, v, w)
+    with pytest.raises(ValueError, match="linear"):
+        PathEngine(prob, pen, FitConfig(screen="gap", adaptive=True))
 
 
 def test_cv_fit_path_smoke():

@@ -1,0 +1,159 @@
+"""Screening-safety property suite (hypothesis).
+
+The GAP-safe sphere test (Ndiaye et al. 2016) evaluated AT a tightly
+converged solution has a near-zero radius, so its survivor set is an
+*exact-screening oracle*: (up to solver tolerance) it contains every
+variable that can be nonzero at that path point and essentially nothing
+else.  That gives machine-checkable safety properties for the heuristic
+strong rules the path engine actually runs:
+
+(a) DFR and sparsegl candidate sets (unioned with the warm-start active
+    set, exactly as the driver forms the optimization set) are supersets of
+    the gap-safe oracle survivor set at the same path point;
+(b) everything DFR screens OUT — variables and whole groups — is exactly
+    zero (<1e-8, x64) in the tightly converged no-screen solution;
+(c) ``dfr_screen_asgl`` with all-ones adaptive weights is ``dfr_screen``
+    bit for bit (the adaptive rule's gamma/eps reduce to tau/eps exactly).
+
+All examples run under the deadline-free derandomized profile registered in
+``tests/conftest.py`` so CI is deterministic.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.experimental import enable_x64
+
+from repro.core import (GroupInfo, Penalty, Problem, gradient, path_start,
+                        solve, standardize)
+from repro.core.screening import (dfr_screen, dfr_screen_asgl,
+                                  gap_safe_screen, sparsegl_screen)
+
+
+def make_problem(seed, n, m, gsize, dtype=jnp.float64, active_groups=3):
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([gsize] * m)
+    X = standardize(rng.normal(size=(n, g.p)))
+    beta = np.zeros(g.p)
+    for gi in rng.choice(m, min(active_groups, m), replace=False):
+        k = max(1, gsize // 2)
+        beta[gi * gsize:gi * gsize + k] = rng.normal(0, 2, k)
+    y = X @ beta + 0.3 * rng.normal(size=n)
+    prob = Problem(jnp.asarray(X, dtype), jnp.asarray(y, dtype), "linear",
+                   True)
+    return prob, g
+
+
+def solved_at(prob, pen, lam):
+    """Tightly converged no-screen solution at ``lam`` (x64 oracle)."""
+    return solve(prob, pen, lam, max_iters=30000, tol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# (a) strong-rule candidates cover the gap-safe oracle survivors
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 8), st.integers(4, 9),
+       st.sampled_from([0.3, 0.5, 0.8, 0.95]))
+def test_strong_rules_cover_gap_safe_survivors(seed, m, gsize, alpha):
+    """(a): DFR / sparsegl candidate-set-union-active must contain every
+    variable the exact oracle cannot rule out at the next path point."""
+    with enable_x64():
+        prob, g = make_problem(seed, n=50, m=m, gsize=gsize)
+        pen = Penalty(g, alpha)
+        lam1 = float(path_start(prob, pen))
+        lam_k, lam_next = 0.7 * lam1, 0.6 * lam1
+        ref = solved_at(prob, pen, lam_k)
+        grad_k = gradient(prob, ref.beta, ref.intercept)
+        active = np.asarray(jnp.abs(ref.beta) > 0)
+        # oracle: gap-safe at lam_next with the CONVERGED lam_next solution
+        # as its reference point -> near-zero radius, tightest safe set
+        sol = solved_at(prob, pen, lam_next)
+        oracle = gap_safe_screen(prob.X, prob.y, sol.beta, pen, lam_next)
+        oracle_v = np.asarray(oracle.keep_vars)
+        oracle_g = np.asarray(oracle.keep_groups)
+        gid = np.asarray(g.group_id)
+        for name, cand in (
+                ("dfr", dfr_screen(grad_k, pen, lam_k, lam_next)),
+                ("sparsegl", sparsegl_screen(grad_k, pen, lam_k, lam_next))):
+            keep_v = np.asarray(cand.keep_vars) | active
+            keep_g = np.asarray(cand.keep_groups).copy()
+            np.logical_or.at(keep_g, gid, active)
+            missed_v = oracle_v & ~keep_v
+            missed_g = oracle_g & ~keep_g
+            assert not missed_v.any(), (name, seed, np.where(missed_v)[0])
+            assert not missed_g.any(), (name, seed, np.where(missed_g)[0])
+
+
+# ---------------------------------------------------------------------------
+# (b) everything DFR screens out is zero in the converged solution
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 8), st.integers(4, 9),
+       st.sampled_from([0.3, 0.5, 0.8, 0.95]))
+def test_dfr_discards_are_zero_in_converged_solution(seed, m, gsize, alpha):
+    """(b): a variable (or whole group) outside the DFR optimization set is
+    exactly zero in the tightly converged no-screen solution (<1e-8, x64)."""
+    with enable_x64():
+        prob, g = make_problem(seed, n=50, m=m, gsize=gsize)
+        pen = Penalty(g, alpha)
+        lam1 = float(path_start(prob, pen))
+        lam_k, lam_next = 0.7 * lam1, 0.6 * lam1
+        ref = solved_at(prob, pen, lam_k)
+        grad_k = gradient(prob, ref.beta, ref.intercept)
+        cand = dfr_screen(grad_k, pen, lam_k, lam_next)
+        opt_v = np.asarray(cand.keep_vars) | np.asarray(
+            jnp.abs(ref.beta) > 0)
+        sol = np.asarray(solved_at(prob, pen, lam_next).beta)
+        assert np.all(np.abs(sol[~opt_v]) < 1e-8), (
+            seed, np.max(np.abs(sol[~opt_v])))
+        # group level: every group DFR screens out (none of its variables in
+        # the optimization set) is an all-zero group in the solution
+        gid = np.asarray(g.group_id)
+        opt_g = np.zeros((g.m,), bool)
+        np.logical_or.at(opt_g, gid, opt_v)
+        for gi in np.where(~opt_g)[0]:
+            assert np.all(np.abs(sol[gid == gi]) < 1e-8), (seed, gi)
+
+
+# ---------------------------------------------------------------------------
+# (c) the adaptive rule reduces to plain SGL at unit weights
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 8), st.integers(3, 9),
+       st.sampled_from([0.0, 0.3, 0.8, 0.95, 1.0]))
+def test_asgl_screen_with_unit_weights_is_sgl_screen(seed, m, gsize, alpha):
+    """(c): all-ones (v, w) collapse gamma_g to tau_g and eps'_g to eps_g
+    exactly, so the adaptive rule's keep masks equal the plain rule's."""
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([gsize] * m)
+    grad = jnp.asarray(rng.normal(size=g.p), jnp.float32)
+    beta = jnp.asarray(
+        rng.normal(size=g.p) * (rng.uniform(size=g.p) < 0.3), jnp.float32)
+    lam_k = float(rng.uniform(0.05, 0.5))
+    lam_next = lam_k * float(rng.uniform(0.6, 0.99))
+    pen = Penalty(g, alpha)
+    pen_unit = Penalty(g, alpha, jnp.ones((g.p,), jnp.float32),
+                       jnp.ones((g.m,), jnp.float32))
+    plain = dfr_screen(grad, pen, lam_k, lam_next)
+    adapt = dfr_screen_asgl(grad, beta, pen_unit, lam_k, lam_next)
+    np.testing.assert_array_equal(np.asarray(plain.keep_groups),
+                                  np.asarray(adapt.keep_groups))
+    np.testing.assert_array_equal(np.asarray(plain.keep_vars),
+                                  np.asarray(adapt.keep_vars))
+
+
+def test_sparsegl_screen_rejects_nothing_at_lambda_max():
+    """Sanity anchor for the suite: at lambda_1 with the null gradient, every
+    rule keeps nothing — the null model is optimal by construction."""
+    prob, g = make_problem(0, n=40, m=5, gsize=6, dtype=jnp.float32)
+    pen = Penalty(g, 0.9)
+    lam1 = float(path_start(prob, pen))
+    c0 = float(jnp.mean(prob.y))
+    grad0 = gradient(prob, jnp.zeros((g.p,), jnp.float32), c0)
+    for cand in (dfr_screen(grad0, pen, lam1, lam1),
+                 sparsegl_screen(grad0, pen, lam1, lam1)):
+        assert not np.asarray(cand.keep_vars).any()
