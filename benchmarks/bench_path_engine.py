@@ -48,6 +48,10 @@ MIN_FLEET_SPEEDUP = 3.0
 # x64 betas identical to sequential under WINDOW_EQUIV_BOUND
 MIN_WINDOW_SPEEDUP = 1.5
 WINDOW_EQUIV_BOUND = 1e-10
+# the device-resident while_loop driver must beat the PR-4 windowed HOST
+# driver by this factor at smoke scale (ISSUE 5 benchmark guard), with x64
+# betas identical to the host driver under WINDOW_EQUIV_BOUND
+MIN_DEVICE_SPEEDUP = 1.2
 
 SCALES = {
     "smoke": dict(n=200, p=2048, m=32, length=20),
@@ -56,11 +60,29 @@ SCALES = {
 # The window benchmark targets the small-width regime the windows were built
 # for: sparse truth, a path that stays above 0.5*lambda_1 (buckets hold at
 # the 8-16 floor), where the sequential loop is pure dispatch overhead.
+# `device_cap` is the device driver's padded upper-bound bucket: the device
+# loop always solves at that fixed width (syncless-ness trades away per-width
+# bucketing), so its natural operating point sits AT the problem's bucket
+# floor — the hand-back to the host driver covers any overflow.
 WINDOW_SCALES = {
     "smoke": dict(n=200, p=2048, m=32, length=64, term=0.5, window=16,
                   cap=64),
     "full": dict(n=400, p=8192, m=128, length=96, term=0.5, window=16,
                  cap=64),
+}
+# The device-driver benchmark targets the regime the while_loop driver was
+# built for: LONG paths over SMALL problems (serving-time refits, CV grids),
+# where the windowed host driver's per-window round-trip — two dispatches,
+# two syncs, and the [W, p] diagnostics transfer + numpy recording — is a
+# large fraction of wall-clock.  `device_cap` is the device loop's padded
+# upper-bound bucket: syncless-ness trades away per-width bucketing, so its
+# natural operating point sits AT the problem's bucket floor (the hand-back
+# to the host driver covers any overflow).
+DEVICE_SCALES = {
+    "smoke": dict(n=100, p=1024, m=32, length=96, term=0.5, window=8,
+                  cap=64, device_cap=8),
+    "full": dict(n=200, p=4096, m=64, length=128, term=0.5, window=8,
+                 cap=64, device_cap=16),
 }
 # The fleet benchmark has its own scale table: fleet workloads (eQTL /
 # multi-phenotype: one path fit per response) are MANY medium problems, not
@@ -151,6 +173,8 @@ def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
         }
     # lambda-window engine vs sequential, small-width regime
     result["path_window"] = win = _window_block(scale, reps)
+    # device-resident while_loop driver vs the windowed host driver
+    result["path_device"] = devb = _device_block(scale, reps, win)
 
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -170,6 +194,16 @@ def run(scale: str = "smoke", out: str = DEFAULT_OUT, reps: int = 3,
         assert win["speedup"] >= MIN_WINDOW_SPEEDUP, (
             f"window speedup {win['speedup']:.2f}x below the "
             f"{MIN_WINDOW_SPEEDUP}x floor at smoke scale")
+    # device driver == host driver (CI-asserted contract) + points/sec floor
+    assert devb["equivalence_x64"]["max_abs_dbeta"] < WINDOW_EQUIV_BOUND, (
+        f"device driver deviates from the host driver by "
+        f"{devb['equivalence_x64']['max_abs_dbeta']:.2e} in x64 "
+        f"(bound {WINDOW_EQUIV_BOUND:.0e})")
+    if scale == "smoke":
+        assert devb["speedup_vs_windowed_host"] >= MIN_DEVICE_SPEEDUP, (
+            f"device-driver speedup {devb['speedup_vs_windowed_host']:.2f}x "
+            f"below the {MIN_DEVICE_SPEEDUP}x floor over the windowed host "
+            "driver at smoke scale")
     return result
 
 
@@ -218,6 +252,61 @@ def _window_block(scale: str, reps: int) -> dict:
         "equivalence_x64": {"max_abs_dbeta": dev64,
                             "bound": WINDOW_EQUIV_BOUND},
         "min_speedup_required": MIN_WINDOW_SPEEDUP,
+    }
+
+
+def _device_block(scale: str, reps: int, win: dict) -> dict:
+    """points/sec of the device-resident while_loop driver vs the PR-4
+    windowed host driver (same problem, same window length), plus the x64
+    device == host equivalence the driver guarantees."""
+    from jax.experimental import enable_x64
+
+    from repro.core.config import FitConfig
+
+    del win                       # the device block times its own regime
+    spec = DEVICE_SCALES[scale]
+    length = spec["length"]
+    prob, pen = make_problem(spec["n"], spec["p"], spec["m"], seed=1,
+                             active=2, coords=4)
+    base = FitConfig(screen="dfr", length=length, term=spec["term"],
+                     tol=1e-5, window=spec["window"])
+    cfg_win = base.replace(window_width_cap=spec["cap"])
+    cfg = base.replace(window_width_cap=spec["device_cap"], driver="device")
+    r_win, t_win = _timed(lambda: fit_path(prob, pen, config=cfg_win), reps)
+    _, t_seq = _timed(lambda: fit_path(prob, pen, config=base.replace(
+        window=1)), reps)
+    r_dev, t_dev = _timed(lambda: fit_path(prob, pen, config=cfg), reps)
+    del r_win
+
+    # exactness contract: driver="device" chains the same per-point program
+    # as the host drivers, so betas agree to float-association noise
+    with enable_x64():
+        prob64, pen64 = make_problem(60, 120, 12, seed=2, active=2, coords=4,
+                                     dtype=jnp.float64)
+        eq = FitConfig(screen="dfr", length=10, term=0.2, tol=1e-12,
+                       dtype="float64")
+        r64_host = fit_path(prob64, pen64, config=eq)
+        r64_dev = fit_path(prob64, pen64,
+                           config=eq.replace(driver="device", window=4,
+                                             window_width_cap=256))
+        dev64 = float(np.max(np.abs(r64_host.betas - r64_dev.betas)))
+
+    return {
+        "n": spec["n"], "p": spec["p"], "m": spec["m"], "length": length,
+        "term": spec["term"], "window": spec["window"],
+        "window_width_cap": spec["device_cap"], "screen": "dfr",
+        "device": {"total_s": t_dev, "points_per_s": length / t_dev,
+                   "window_hit_rate": r_dev.diagnostics.window_hit_rate,
+                   "buckets_compiled": list(r_dev.buckets)},
+        "windowed_host": {"total_s": t_win,
+                          "points_per_s": length / t_win},
+        "sequential_host": {"total_s": t_seq,
+                            "points_per_s": length / t_seq},
+        "speedup_vs_windowed_host": t_win / t_dev,
+        "speedup_vs_sequential": t_seq / t_dev,
+        "equivalence_x64": {"max_abs_dbeta": dev64,
+                            "bound": WINDOW_EQUIV_BOUND},
+        "min_speedup_required": MIN_DEVICE_SPEEDUP,
     }
 
 

@@ -54,10 +54,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.config import EngineKey, FitConfig
-from ..core.engine import STEP_REGROW, bucket_width
+from ..core.engine import STEP_REGROW, _diag_counts, bucket_width
 from ..core.groups import GroupInfo, expand, group_l2, to_padded
-from ..core.path import (PathResult, _metrics_init, _record, lambda_path,
-                         path_start)
+from ..core.path import (PathResult, _metrics_init, _record, _record_counts,
+                         lambda_path, path_start)
 from ..core.losses import Problem
 from ..core.penalties import (Penalty, asgl_group_epsilon_norms, sgl_eps,
                               sgl_group_epsilon_norms, sgl_tau, soft_threshold)
@@ -669,14 +669,7 @@ def fleet_null_intercepts(fleet: Fleet):
 
 
 def _diag_one(mask, beta, keep_g, keep_v, gid, *, m):
-    act_v = beta != 0
-    act_per_g = jax.ops.segment_sum(act_v.astype(jnp.int32), gid,
-                                    num_segments=m)
-    opt_per_g = jax.ops.segment_sum(mask.astype(jnp.int32), gid,
-                                    num_segments=m)
-    return jnp.stack([jnp.sum(act_per_g > 0), jnp.sum(act_v),
-                      jnp.sum(keep_g), jnp.sum(keep_v),
-                      jnp.sum(opt_per_g > 0), jnp.sum(mask)])
+    return _diag_counts(mask, beta, keep_g, keep_v, gid, m=m)
 
 
 @jax.jit
@@ -697,6 +690,216 @@ def _select_round(upd, new, old):
     return tuple(
         jnp.where(upd.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
         for n, o in zip(new, old))
+
+
+class _FleetDevState(NamedTuple):
+    """Carry of the fleet device-resident path loop."""
+
+    k: jnp.ndarray          # shared (lockstep) next path point
+    betaB: jnp.ndarray      # [B, p]
+    cB: jnp.ndarray         # [B]
+    gradB: jnp.ndarray      # [B, p]
+    stepB: jnp.ndarray      # [B]
+    betas: jnp.ndarray      # [B, l, p] accumulated solutions
+    cs: jnp.ndarray         # [B, l]
+    diag: jnp.ndarray       # [B, l, 10] int32 (core _DevState layout per lane)
+    stop: jnp.ndarray       # bool
+
+
+@partial(jax.jit, static_argnames=("width", "window", "max_iters",
+                                   "kkt_rounds", "mode", "check_kkt"))
+def fleet_device_step(fleet: Fleet, lamsB, k0, betaB, cB, gradB, stepB, tol,
+                      key: EngineKey, *, width: int, window: int,
+                      max_iters: int, kkt_rounds: int, mode,
+                      check_kkt: bool):
+    """The fleet mirror of :func:`repro.core.engine.device_path_step`: the
+    ``[B]`` problem axis composed with the device-resident ``lax.while_loop``
+    over lambda windows, all inside ONE compiled program.
+
+    Per iteration: vmapped union screen -> vmapped per-lane windowed scans
+    (``[B] x [W]`` in one dispatch) -> the fleet accepts the lane-wise
+    minimum violation-free prefix (the shared lambda index stays lockstep)
+    -> an in-graph sequential fleet step (full per-lane KKT loop with
+    frozen-lane selects) repairs the first broken point.  The solve bucket
+    is the padded upper bound ``width`` for every lane — no per-window
+    ``[B]`` size sync — and the loop hands back to the host driver when any
+    lane's union or repair mask outgrows it.  Diagnostics accumulate
+    in-graph ([B, l, 10] int32) and transfer once per path.
+
+    Returns ``(k_stop, betaB, cB, gradB, stepB, betas [B,l,p], cs [B,l],
+    diag [B,l,10])``.
+    """
+    B, l = lamsB.shape
+    p, m = fleet.p, fleet.m
+    dt = fleet.Y.dtype
+    i32 = jnp.int32
+    lams_pad = jnp.concatenate(
+        [lamsB, jnp.repeat(lamsB[:, -1:], window, axis=1)], axis=1)
+    j_idx = jnp.arange(window)
+    gax = None if fleet.shared_g else 0
+    screen_axes = fleet._axes() + (0, 0, 0, 0)
+    scan_axes = fleet._axes() + (0, 0, 0, 0, 0, 0, 0, None)
+    step_axes = fleet._axes() + (0, 0, 0, 0, 0, None)
+    fargs = (fleet.Xp, fleet.Y, fleet.gid, fleet.gsizes, fleet.gstarts,
+             fleet.alpha, fleet.v, fleet.w, fleet.n_eff)
+
+    def cond(st: _FleetDevState):
+        return (st.k < l) & (~st.stop)
+
+    def body(st: _FleetDevState):
+        k = st.k
+        lam_prevB = lams_pad[:, jnp.maximum(k - 1, 0)]
+        lam_winB = jax.lax.dynamic_slice_in_dim(lams_pad, k, window, axis=1)
+        if mode is None:
+            unionB = jnp.ones((B, p), bool)
+        else:
+            one = partial(_window_screen_one, mode=mode, loss=fleet.loss,
+                          p=p, m=m, max_size=fleet.max_size,
+                          eps_method=key.eps_method)
+            unionB = jax.vmap(one, in_axes=screen_axes)(
+                *fargs, st.gradB, st.betaB, lam_prevB, lam_winB)[3]
+        overflow = jnp.max(jnp.sum(unionB, axis=1)) > width
+
+        def declined(st):
+            return st._replace(stop=jnp.asarray(True))
+
+        def attempt(st):
+            onew = partial(_windowed_step_one, width=width, window=window,
+                           max_iters=max_iters, mode=mode, loss=fleet.loss,
+                           intercept=fleet.intercept, p=p, m=m,
+                           max_size=fleet.max_size,
+                           eps_method=key.eps_method)
+            (betasWB, csWB, gradsWB, violsWB, nvWB, itersWB, convWB, diagWB,
+             stepsWB) = jax.vmap(onew, in_axes=scan_axes)(
+                *fargs, unionB, st.betaB, st.cB, st.gradB, lam_prevB,
+                lam_winB, st.stepB, tol)
+            W_eff = jnp.minimum(window, l - k)
+            badB = (nvWB > 0) & (j_idx[None, :] < W_eff)
+            first_bad = jnp.where(badB.any(axis=1), jnp.argmax(badB, axis=1),
+                                  window)
+            gp = jnp.minimum(jnp.min(first_bad), W_eff).astype(i32)
+            rows = jnp.where(j_idx < gp, k + j_idx, l)
+            drows = jnp.concatenate(
+                [diagWB.astype(i32), jnp.zeros((B, window, 1), i32),
+                 itersWB[..., None].astype(i32), convWB[..., None].astype(i32),
+                 jnp.ones((B, window, 1), i32)], axis=2)
+            has_acc = gp > 0
+            jm1 = jnp.maximum(gp - 1, 0)
+            st2 = st._replace(
+                k=k + gp,
+                betaB=jnp.where(has_acc, betasWB[:, jm1], st.betaB),
+                cB=jnp.where(has_acc, csWB[:, jm1], st.cB),
+                gradB=jnp.where(has_acc, gradsWB[:, jm1], st.gradB),
+                stepB=jnp.where(has_acc, stepsWB[:, jm1], st.stepB),
+                betas=st.betas.at[:, rows].set(betasWB, mode="drop"),
+                cs=st.cs.at[:, rows].set(csWB, mode="drop"),
+                diag=st.diag.at[:, rows].set(drows, mode="drop"))
+
+            def repair(st2):
+                # one in-graph sequential fleet step (full per-lane KKT
+                # loop, frozen-lane selects) repairs the first broken point
+                # for every lane — the mirror of the host driver's
+                # force_seq_k round-trip
+                k2 = st2.k
+                lam_jB = lams_pad[:, k2]
+                lam_aB = lams_pad[:, jnp.maximum(k2 - 1, 0)]
+                if mode is None:
+                    keep_gB = jnp.ones((B, m), bool)
+                    keep_vB = jnp.ones((B, p), bool)
+                    maskB0 = jnp.ones((B, p), bool)
+                else:
+                    ones = partial(_screen_one, mode=mode, loss=fleet.loss,
+                                   p=p, m=m, max_size=fleet.max_size,
+                                   eps_method=key.eps_method)
+                    keep_gB, keep_vB, maskB0 = jax.vmap(
+                        ones, in_axes=screen_axes)(
+                        *fargs, st2.gradB, st2.betaB, lam_aB, lam_jB)
+                # (mask, beta, c, grad, step, total, iters, conv, rounds,
+                #  done, ovf)
+                rs0 = (maskB0, st2.betaB, st2.cB, st2.gradB, st2.stepB,
+                       jnp.zeros((B,), i32), jnp.zeros((B,), i32),
+                       jnp.ones((B,), bool), jnp.asarray(0, i32),
+                       jnp.zeros((B,), bool), jnp.asarray(False))
+
+                def rcond(rs):
+                    return (~rs[9]).any() & (rs[8] < kkt_rounds) & (~rs[10])
+
+                def rbody(rs):
+                    (maskB_r, betaB_r, cB_r, gradB_r, stepB_r, totalB_r,
+                     itB_r, cvB_r, rounds_r, doneB_r, _ovf) = rs
+                    cnts = jnp.sum(maskB_r, axis=1)
+                    ovf = jnp.any(~doneB_r & (cnts > width))
+
+                    def solve_round(_):
+                        onep = partial(_path_step_one, width=width,
+                                       max_iters=max_iters,
+                                       check_kkt=check_kkt, loss=fleet.loss,
+                                       intercept=fleet.intercept, p=p, m=m,
+                                       max_size=fleet.max_size)
+                        step0 = jnp.minimum(stepB_r * STEP_REGROW, 1.0)
+                        (betaN, cN, gradN, violsN, nvN, itersN, convN,
+                         stepN) = jax.vmap(onep, in_axes=step_axes)(
+                            *fargs, maskB_r, betaB_r, cB_r, lam_jB, step0,
+                            tol)
+                        upd = ~doneB_r
+
+                        def sel(nw, od):
+                            return jnp.where(
+                                upd.reshape((-1,) + (1,) * (nw.ndim - 1)),
+                                nw, od)
+
+                        nv = jnp.where(doneB_r, 0, nvN.astype(i32))
+                        return (sel(maskB_r | violsN, maskB_r),
+                                sel(betaN, betaB_r), sel(cN, cB_r),
+                                sel(gradN, gradB_r), sel(stepN, stepB_r),
+                                totalB_r + nv,
+                                jnp.where(doneB_r, itB_r, itersN.astype(i32)),
+                                jnp.where(doneB_r, cvB_r, convN),
+                                rounds_r + 1, doneB_r | (nv == 0),
+                                jnp.asarray(False))
+
+                    def overflowed(_):
+                        return (maskB_r, betaB_r, cB_r, gradB_r, stepB_r,
+                                totalB_r, itB_r, cvB_r, rounds_r, doneB_r,
+                                jnp.asarray(True))
+
+                    return jax.lax.cond(ovf, overflowed, solve_round, None)
+
+                (maskB_f, betaB_f, cB_f, gradB_f, stepB_f, totalB_f, itB_f,
+                 cvB_f, _, _, ovf) = jax.lax.while_loop(rcond, rbody, rs0)
+
+                def commit(st2):
+                    kr = st2.k
+                    done_diag = jax.vmap(partial(_diag_counts, m=m),
+                                         in_axes=(0, 0, 0, 0, gax))(
+                        maskB_f, betaB_f, keep_gB, keep_vB, fleet.gid)
+                    nv_rec = totalB_f if check_kkt else jnp.zeros((B,), i32)
+                    drow = jnp.concatenate(
+                        [done_diag, nv_rec[:, None], itB_f[:, None],
+                         cvB_f[:, None].astype(i32),
+                         jnp.zeros((B, 1), i32)], axis=1)
+                    return st2._replace(
+                        k=kr + 1, betaB=betaB_f, cB=cB_f, gradB=gradB_f,
+                        stepB=stepB_f,
+                        betas=st2.betas.at[:, kr].set(betaB_f),
+                        cs=st2.cs.at[:, kr].set(cB_f),
+                        diag=st2.diag.at[:, kr].set(drow))
+
+                def abort(st2):
+                    return st2._replace(stop=jnp.asarray(True))
+
+                return jax.lax.cond(ovf, abort, commit, st2)
+
+            return jax.lax.cond(gp < W_eff, repair, lambda s: s, st2)
+
+        return jax.lax.cond(overflow, declined, attempt, st)
+
+    st0 = _FleetDevState(jnp.asarray(k0, i32), betaB, cB, gradB, stepB,
+                         jnp.zeros((B, l, p), dt), jnp.zeros((B, l), dt),
+                         jnp.zeros((B, l, 10), i32), jnp.asarray(False))
+    st = jax.lax.while_loop(cond, body, st0)
+    return (st.k, st.betaB, st.cB, st.gradB, st.stepB, st.betas, st.cs,
+            st.diag)
 
 
 # ---------------------------------------------------------------------------
@@ -770,6 +973,35 @@ class BatchedPathEngine:
             self.stepB, self.config.tol, self.key, width=width,
             window=lam_winB.shape[1], max_iters=self.config.max_iters,
             mode=self.config.screen)
+
+    # -- device-resident driver ----------------------------------------------
+
+    def device_width(self) -> int:
+        """The shared padded upper-bound bucket of the fleet device loop
+        (mirror of :meth:`repro.core.engine.PathEngine.device_width`)."""
+        p = self.fleet.p
+        if self.config.screen is None:
+            return p
+        return bucket_width(min(self.config.window_width_cap, p), p,
+                            self.config.bucket_min)
+
+    def device_run(self, lamsB, k0: int, betaB, cB, gradB):
+        """Run the remaining path for the whole fleet as ONE compiled device
+        program.  Returns host-side ``(k_stop, betaB, cB, gradB,
+        betas [B,l,p], cs [B,l], diag [B,l,10])`` in a single transfer."""
+        cfg = self.config
+        width = self.device_width()
+        self.widths.add(width)
+        (k_stop, betaB, cB, gradB, stepB, betas, cs, diag) = \
+            fleet_device_step(
+                self.fleet, lamsB, k0, betaB, cB, gradB, self.stepB,
+                cfg.tol, self.key, width=width, window=cfg.window,
+                max_iters=cfg.max_iters, kkt_rounds=cfg.kkt_max_rounds,
+                mode=cfg.screen, check_kkt=cfg.check_kkt)
+        self.stepB = stepB
+        # the ONE [B]-fleet host transfer for the device-resident stretch
+        return (int(k_stop), betaB, cB, gradB, np.asarray(betas),
+                np.asarray(cs), np.asarray(diag))
 
 
 @dataclasses.dataclass
@@ -848,9 +1080,32 @@ def fit_fleet_path(fleet: Fleet, lambdas, *, config: FitConfig = None,
     # drift apart: the shared lambda index k moves in lockstep)
     use_window = cfg.window > 1
     force_seq_k = -1
+    for b in range(B):
+        metrics[b]["window_mode"] = use_window or cfg.driver == "device"
 
     zero_keep = None
     k = k0
+    # driver="device": the whole fleet path loop as ONE compiled program
+    # (fleet_device_step); the host loop below drives only the
+    # large-active-set tail the device loop hands back
+    if cfg.driver == "device" and k < l:
+        t0 = time.perf_counter()
+        (k, betaB, cB, gradB, bs_dev, cs_dev, diag_dev) = engine.device_run(
+            jnp.asarray(lambdas, dt), k0, betaB, cB, gradB)
+        t_solve += time.perf_counter() - t0
+        betas[:, k0:k] = bs_dev[:, k0:k]
+        intercepts[:, k0:k] = cs_dev[:, k0:k]
+        for b in range(B):
+            pb, gb = lane_p[b], lane_g[b]
+            for j in range(k0, k):
+                row = diag_dev[b, j].copy()
+                if cfg.screen is None:   # no-screen convention: keep all
+                    row[2:6] = (gb.m, pb, gb.m, pb)
+                _record_counts(metrics[b], row, pb, gb.m)
+        if cfg.verbose and k > k0:
+            print(f"[fleet] device driver solved points {k0}..{k - 1}"
+                  + ("" if k == l else f"; host loop resumes at {k}"))
+
     while k < l:
         lam_kB = jnp.asarray(lambdas[:, max(k - 1, 0)], dt)
         lamB = jnp.asarray(lambdas[:, k], dt)
@@ -935,6 +1190,12 @@ def fit_fleet_path(fleet: Fleet, lambdas, *, config: FitConfig = None,
                         print(f"[fleet {k - gp:3d}+{gp}/{l}] B={B} window "
                               f"accepted {gp}/{W}")
                     continue
+            elif max_u > 0:
+                # some lane's union outgrew the cap: active sets only grow
+                # on decreasing grids, so stop paying speculative window
+                # screens for the rest of the path (mirrors the device
+                # loop's permanent hand-back); all-null windows keep trying
+                use_window = False
             # declined: fall through to the sequential body for point k
 
         # ---- screening (one vmapped pass for the fleet) ------------------

@@ -258,10 +258,20 @@ class BatchedSGL:
             setattr(est, k + "_", d[k] if k in d else None)
         diag_fields = list(PathDiagnostics.__dataclass_fields__)
         l = est.lambdas_.shape[1]
-        # pre-window saves lack diag_windowed: sequential by construction
+
+        # pre-window saves lack diag_windowed (and pre-device-driver saves
+        # the scalar diag_window_mode): sequential by construction.  ONLY
+        # those two fields may default — any other missing diag_* key means
+        # a truncated/corrupt save and must raise
+        def _field(f, b):
+            if f == "window_mode":
+                return (bool(d["diag_window_mode"][b])
+                        if "diag_window_mode" in d else False)
+            if f == "windowed" and "diag_windowed" not in d:
+                return np.zeros((l,), bool)
+            return d[f"diag_{f}"][b]
+
         est.diagnostics_ = [
-            PathDiagnostics(**{f: (d[f"diag_{f}"][b] if f"diag_{f}" in d
-                                   else np.zeros((l,), bool))
-                               for f in diag_fields})
+            PathDiagnostics(**{f: _field(f, b) for f in diag_fields})
             for b in range(est.n_problems_)]
         return est

@@ -98,11 +98,41 @@ class FleetBucket:
     shared_design: bool
 
 
+class _IdKey:
+    """Identity dict key that holds a STRONG reference to the object.
+
+    Keying shared-design detection on bare ``id(obj)`` tuples is unsound:
+    ``id()`` of a garbage-collected array can be reused by a brand-new,
+    *different* array, silently aliasing two distinct designs into one
+    unpadded fleet (or serving one design's cached PCA weights to another).
+    ``_IdKey`` retains the object for exactly the scope its key lives in —
+    the object cannot die (so its id cannot be recycled) while any map
+    entry still refers to it — and compares by identity, so equal-content
+    but distinct arrays never alias.
+    """
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj):
+        self.obj = obj
+
+    def __hash__(self) -> int:
+        return id(self.obj)        # stable for the (retained) obj's lifetime
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, _IdKey) and self.obj is other.obj
+
+    def __repr__(self) -> str:
+        return f"_IdKey({type(self.obj).__name__}@{id(self.obj):#x})"
+
+
 def _design_key(req: FitRequest) -> tuple:
     """Identity of (X, groups) for shared-design detection.  Requests must
     pass the *same array object* to share a design (cheap and unambiguous;
-    content hashing a [n, p] matrix per request would not be)."""
-    return (id(req.X), id(req.groups))
+    content hashing a [n, p] matrix per request would not be).  The key
+    holds strong references for the bucketing scope — see :class:`_IdKey`
+    for why bare ``id()`` tuples would be an aliasing bug."""
+    return (_IdKey(req.X), _IdKey(req.groups))
 
 
 def _grid_for(req: FitRequest, cfg: FitConfig, alpha: float, vw,

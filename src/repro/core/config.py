@@ -37,6 +37,7 @@ SOLVERS = ("fista", "atos")
 BACKENDS = ("jnp", "pallas")
 EPS_METHODS = ("exact", "bisect", "kernel")
 DTYPES = ("float32", "float64")
+DRIVERS = ("host", "device")
 
 @dataclasses.dataclass(frozen=True)
 class FitConfig:
@@ -80,6 +81,21 @@ class FitConfig:
     # the windowed step only, and never affect the shared sequential steps.
     window: int = 1                   # lambda points per fused window step
     window_width_cap: int = 64        # max union bucket width for windowing
+    # driver="device" moves the lambda-path loop ITSELF on device: one
+    # compiled `lax.while_loop` chains window-screen -> windowed scan-solve
+    # -> KKT audit -> accept/repair for the whole path, with the screened
+    # bucket width replaced by the padded upper bound `window_width_cap`
+    # (already a static) so no per-window nonzero-size sync is needed;
+    # violations are repaired by an in-graph sequential branch.  Host syncs:
+    # zero per window, ONE diagnostics transfer per path.  The device loop
+    # hands back to the host driver only when the active set outgrows the
+    # width cap (the large-width regime where per-point bucketing wins
+    # anyway).  Like `window`/`window_width_cap`, `driver` rides as a
+    # per-call jit static on the device step only and is deliberately NOT
+    # part of EngineKey: host and device fits share every sequential/window
+    # compilation.  Solutions are identical to driver="host" (same per-point
+    # program; <1e-10 in x64, CI-asserted).
+    driver: str = "host"              # host | device
     verbose: bool = False
     # -- batched multi-problem fit (repro.batch) ----------------------------
     batch_max: int = 64               # max problems per compiled fleet chunk
@@ -125,6 +141,12 @@ class FitConfig:
             bad(f"gamma1/gamma2 must be >= 0, got ({self.gamma1}, {self.gamma2})")
         if self.backend == "pallas" and self.solver != "fista":
             bad("backend='pallas' is implemented for the fista solver only")
+        if self.driver not in DRIVERS:
+            bad(f"unknown driver {self.driver!r} (choose from {DRIVERS})")
+        if self.driver == "device" and self.screen == "gap_dynamic":
+            bad("driver='device' does not support screen='gap_dynamic' "
+                "(its mid-solve re-screen loop is host-adaptive per point); "
+                "use driver='host'")
         # scalar fields must be plain hashable Python values: a traced/array
         # value here would silently defeat the static-pytree registration
         for f in dataclasses.fields(self):

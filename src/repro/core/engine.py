@@ -43,9 +43,11 @@ kernels consume, full-group sqrt(p_g) weights carried via ``w``).
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .config import EngineKey, FitConfig
 from .kkt import kkt_check_from_eta, kkt_gradient
@@ -121,20 +123,11 @@ def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
     return keep_groups, keep_vars, mask
 
 
-@partial(jax.jit, static_argnames=("mode",))
-def window_screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_prev,
-                       lam_win, key: EngineKey, *, mode: str):
-    """Speculative union screen for a lambda window.
-
-    Screens every point of ``lam_win`` ([W]) against the CURRENT gradient
-    (the strong-rule anchor stays ``lam_prev``, the last solved point) and
-    returns the union candidate mask — the one shared solve bucket of
-    :func:`windowed_path_step` — plus the first point's own rule masks so a
-    driver that decides against windowing (union bucket over the width cap)
-    has already paid for point k's sequential screen.
-
-    Returns ``(keep_g0, keep_v0, mask0, union_mask, union_count, count0)``.
-    """
+def _window_union(prob: Problem, penalty: Penalty, grad, beta, lam_prev,
+                  lam_win, key: EngineKey, mode: str):
+    """Union candidate screen over a lambda window -> (keep_g0, keep_v0,
+    mask0, union).  Shared by :func:`window_screen_step` and the device
+    driver's in-graph window screen, so both run the same rule."""
     keep_g0, keep_v0 = _screen_masks(prob, penalty, grad, beta, lam_prev,
                                      lam_win[0], key, mode)
     mask0 = keep_v0 | (beta != 0)
@@ -151,24 +144,40 @@ def window_screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_prev,
                                                lam_prev, lm, key, mode)[1]
                       )(lam_win)
         union = jnp.any(kv, axis=0) | mask0
+    return keep_g0, keep_v0, mask0, union
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def window_screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_prev,
+                       lam_win, key: EngineKey, *, mode: str):
+    """Speculative union screen for a lambda window.
+
+    Screens every point of ``lam_win`` ([W]) against the CURRENT gradient
+    (the strong-rule anchor stays ``lam_prev``, the last solved point) and
+    returns the union candidate mask — the one shared solve bucket of
+    :func:`windowed_path_step` — plus the first point's own rule masks so a
+    driver that decides against windowing (union bucket over the width cap)
+    has already paid for point k's sequential screen.
+
+    Returns ``(keep_g0, keep_v0, mask0, union_mask, union_count, count0)``.
+    """
+    keep_g0, keep_v0, mask0, union = _window_union(prob, penalty, grad, beta,
+                                                   lam_prev, lam_win, key,
+                                                   mode)
     return (keep_g0, keep_v0, mask0, union,
             jnp.sum(union), jnp.sum(mask0))
 
 
-@partial(jax.jit, static_argnames=("width", "max_iters", "check_kkt"))
-def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
-                    step0, tol, key: EngineKey, *, width: int,
-                    max_iters: int, check_kkt: bool):
-    """gather -> restricted solve -> scatter -> full gradient -> KKT audit.
-
-    ``tol`` is passed as a traced operand (not read off the static config)
-    on purpose: compiled solver variants are tolerance-agnostic, so fits at
-    different tolerances share the same bucketed compilations.
-    """
+def _point_solve(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
+                 step0, tol, key: EngineKey, *, width: int,
+                 max_iters: int, check_kkt: bool):
+    """The body of :func:`fused_path_step`, shared with the device driver's
+    in-graph repair branch (so both run bit-for-bit the same solve)."""
     p = prob.p
     idx_pad = jnp.nonzero(mask, size=width, fill_value=p)[0]
     Xs = Xp[:, idx_pad]                                   # O(n*width) gather
-    pen_sub = restrict_penalty(penalty, mask, idx_pad, width)
+    pen_sub = restrict_penalty(penalty, mask, idx_pad, width,
+                               dtype=beta.dtype)
     prob_sub = Problem(Xs, prob.y, prob.loss, prob.intercept)
     b0 = jnp.concatenate([beta, jnp.zeros((1,), beta.dtype)])[idx_pad]
     res = solve(prob_sub, pen_sub, lam, beta0=b0, c0=c, config=key,
@@ -185,6 +194,21 @@ def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
             res.iters, res.converged, res.step)
 
 
+@partial(jax.jit, static_argnames=("width", "max_iters", "check_kkt"))
+def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
+                    step0, tol, key: EngineKey, *, width: int,
+                    max_iters: int, check_kkt: bool):
+    """gather -> restricted solve -> scatter -> full gradient -> KKT audit.
+
+    ``tol`` is passed as a traced operand (not read off the static config)
+    on purpose: compiled solver variants are tolerance-agnostic, so fits at
+    different tolerances share the same bucketed compilations.
+    """
+    return _point_solve(prob, Xp, penalty, mask, beta, c, lam, step0, tol,
+                        key, width=width, max_iters=max_iters,
+                        check_kkt=check_kkt)
+
+
 # within a solve the backtracking step is monotone non-increasing and
 # rounding noise near convergence can over-shrink it; re-growing by bt^-4 at
 # each solve entry (capped at the cold-start 1.0) lets the carried step track
@@ -193,12 +217,13 @@ def fused_path_step(prob: Problem, Xp, penalty: Penalty, mask, beta, c, lam,
 STEP_REGROW = 0.7 ** -4
 
 
-@partial(jax.jit, static_argnames=("width", "window", "max_iters", "mode"))
-def windowed_path_step(prob: Problem, Xp, penalty: Penalty, union_mask, beta,
-                       c, grad, lam_prev, lam_win, step0, tol,
-                       key: EngineKey, *, width: int, window: int,
-                       max_iters: int, mode):
-    """Solve ``window`` consecutive path points in ONE fused jitted step.
+def _window_scan(prob: Problem, Xp, penalty: Penalty, union_mask, beta,
+                 c, grad, lam_prev, lam_win, step0, tol,
+                 key: EngineKey, *, width: int, window: int,
+                 max_iters: int, mode):
+    """The scan body of :func:`windowed_path_step`, shared with the device
+    driver's while_loop body (both chain bit-for-bit the same per-point
+    program).
 
     A ``lax.scan`` over the lambda axis chains the sequential per-point
     program — screen (against the previous point's gradient, exactly the
@@ -230,7 +255,7 @@ def windowed_path_step(prob: Problem, Xp, penalty: Penalty, union_mask, beta,
     dt = beta.dtype
     idx_pad = jnp.nonzero(union_mask, size=width, fill_value=p)[0]
     Xs = Xp[:, idx_pad]                                   # the ONE gather
-    pen_sub = restrict_penalty(penalty, union_mask, idx_pad, width)
+    pen_sub = restrict_penalty(penalty, union_mask, idx_pad, width, dtype=dt)
     mask_ext_false = jnp.zeros((1,), bool)
     beta_sub0 = jnp.concatenate([beta, jnp.zeros((1,), dt)])[idx_pad]
 
@@ -268,6 +293,34 @@ def windowed_path_step(prob: Problem, Xp, penalty: Penalty, union_mask, beta,
     return outs
 
 
+@partial(jax.jit, static_argnames=("width", "window", "max_iters", "mode"))
+def windowed_path_step(prob: Problem, Xp, penalty: Penalty, union_mask, beta,
+                       c, grad, lam_prev, lam_win, step0, tol,
+                       key: EngineKey, *, width: int, window: int,
+                       max_iters: int, mode):
+    """Solve ``window`` consecutive path points in ONE fused jitted step
+    (see :func:`_window_scan` for the full mechanism and the returned
+    per-point stacks)."""
+    return _window_scan(prob, Xp, penalty, union_mask, beta, c, grad,
+                        lam_prev, lam_win, step0, tol, key, width=width,
+                        window=window, max_iters=max_iters, mode=mode)
+
+
+def _diag_counts(mask, beta, keep_g, keep_v, gid, *, m: int):
+    """Per-point diagnostics counters computed ON DEVICE -> [6] int32
+    ``(active_g, active_v, cand_g, cand_v, opt_g, opt_v)``.  Shared with the
+    batch engine's per-lane recorder and the device driver's in-scan
+    accumulation (one transfer per path instead of per point)."""
+    act_v = beta != 0
+    act_per_g = jax.ops.segment_sum(act_v.astype(jnp.int32), gid,
+                                    num_segments=m)
+    opt_per_g = jax.ops.segment_sum(mask.astype(jnp.int32), gid,
+                                    num_segments=m)
+    return jnp.stack([jnp.sum(act_per_g > 0), jnp.sum(act_v),
+                      jnp.sum(keep_g), jnp.sum(keep_v),
+                      jnp.sum(opt_per_g > 0), jnp.sum(mask)]).astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("check_kkt",))
 def null_path_step(prob: Problem, penalty: Penalty, c, lam, mask,
                    key: EngineKey, *, check_kkt: bool):
@@ -282,6 +335,204 @@ def null_path_step(prob: Problem, penalty: Penalty, c, lam, mask,
 @jax.jit
 def gradient_step(prob: Problem, beta, c, key: EngineKey):
     return kkt_gradient(prob, beta, c, backend=key.backend)
+
+
+class _DevState(NamedTuple):
+    """Carry of the device-resident path loop (``device_path_step``)."""
+
+    k: jnp.ndarray          # next unsolved path point
+    beta: jnp.ndarray       # [p] last solved point
+    c: jnp.ndarray
+    grad: jnp.ndarray       # [p] its full gradient (next screen's input)
+    step: jnp.ndarray       # warm-started solver step
+    betas: jnp.ndarray      # [l, p] accumulated solutions
+    cs: jnp.ndarray         # [l]
+    diag: jnp.ndarray       # [l, 10] int32: (active_g, active_v, cand_g,
+    #                         cand_v, opt_g, opt_v, kkt_viols, iters,
+    #                         converged, windowed) per point
+    stop: jnp.ndarray       # bool: hand the rest back to the host driver
+
+
+@partial(jax.jit, static_argnames=("width", "window", "max_iters",
+                                   "kkt_rounds", "mode", "check_kkt"))
+def device_path_step(prob: Problem, Xp, penalty: Penalty, lams, k0, beta, c,
+                     grad, step0, tol, key: EngineKey, *, width: int,
+                     window: int, max_iters: int, kkt_rounds: int, mode,
+                     check_kkt: bool):
+    """The whole lambda path as ONE compiled program (``driver="device"``).
+
+    A ``lax.while_loop`` over lambda windows chains window-screen
+    (:func:`_window_union`) -> windowed scan-solve (:func:`_window_scan`,
+    the exact per-point program of the host drivers) -> per-point KKT audit
+    -> accept/repair, entirely on device.  The screened bucket width is
+    replaced by the padded upper bound ``width`` (a static, from
+    ``FitConfig.window_width_cap``), so no per-window ``nonzero``-size sync
+    is ever needed: padding slots gather the zero column of ``Xp`` and
+    contribute exact zeros, making the fixed-width solves value-identical
+    to the host drivers' per-width bucketed ones.
+
+    KKT violations are repaired by an in-graph sequential branch instead of
+    a host round-trip: the scan's speculative solve at the first violating
+    point IS the host fallback's first sequential round (same warm start,
+    same screen, width-neutral gather), so the repair re-enters the
+    violation loop from its outputs — violators re-join the mask, the point
+    re-solves warm-started, up to ``kkt_rounds`` total rounds, exactly the
+    host driver's loop.
+
+    The loop hands control back to the host driver (``stop``) only when a
+    union candidate set — or a repair mask — outgrows ``width``: that is
+    the large-active-set regime where the host's per-point power-of-two
+    bucketing is the right tool anyway.  Per-point diagnostics counters are
+    accumulated in-scan into ``diag`` ([l, 10] int32) and transferred ONCE
+    at the end of the path: zero host syncs per window, one transfer per
+    path.
+
+    Returns ``(k_stop, beta, c, grad, step, betas [l,p], cs [l],
+    diag [l,10])``: points ``[k0, k_stop)`` are solved; the carried state is
+    primed for the host driver to resume at ``k_stop``.
+    """
+    l = lams.shape[0]
+    p, m = prob.p, penalty.g.m
+    gid = penalty.g.group_id
+    dt = beta.dtype
+    i32 = jnp.int32
+    # tail windows read past the grid: pad by repeating the last lambda (the
+    # duplicates warm-start at their own solution and are discarded via the
+    # W_eff range mask — the host drivers' tail convention)
+    lams_pad = jnp.concatenate([lams, jnp.full((window,), lams[-1], dt)])
+    j_idx = jnp.arange(window)
+
+    def cond(st: _DevState):
+        return (st.k < l) & (~st.stop)
+
+    def body(st: _DevState):
+        k = st.k
+        lam_prev = lams_pad[jnp.maximum(k - 1, 0)]
+        lam_win = jax.lax.dynamic_slice(lams_pad, (k,), (window,))
+        if mode is None:
+            keep_g0 = jnp.ones((m,), bool)
+            keep_v0 = jnp.ones((p,), bool)
+            union = jnp.ones((p,), bool)
+        else:
+            keep_g0, keep_v0, _, union = _window_union(
+                prob, penalty, st.grad, st.beta, lam_prev, lam_win, key, mode)
+        del keep_g0, keep_v0
+        # a union larger than the static bucket cannot be gathered
+        # (nonzero(size=width) would silently drop columns): hand back
+        overflow = jnp.sum(union) > width
+
+        def declined(st):
+            return st._replace(stop=jnp.asarray(True))
+
+        def attempt(st):
+            (betasW, csW, gradsW, violsW, nvW, itersW, convW, kgW, kvW,
+             masksW, stepsW) = _window_scan(
+                prob, Xp, penalty, union, st.beta, st.c, st.grad, lam_prev,
+                lam_win, st.step, tol, key, width=width, window=window,
+                max_iters=max_iters, mode=mode)
+            W_eff = jnp.minimum(window, l - k)
+            bad = (nvW > 0) & (j_idx < W_eff)
+            fb = jnp.minimum(jnp.where(bad.any(), jnp.argmax(bad), window),
+                             W_eff).astype(i32)
+            # accepted prefix: one batched scatter per stack, rejected and
+            # padded-tail rows routed out of range and dropped
+            rows = jnp.where(j_idx < fb, k + j_idx, l)
+            diagW = jax.vmap(partial(_diag_counts, m=m),
+                             in_axes=(0, 0, 0, 0, None))(masksW, betasW,
+                                                         kgW, kvW, gid)
+            drows = jnp.concatenate(
+                [diagW, jnp.zeros((window, 1), i32),          # kkt_viols
+                 itersW[:, None].astype(i32), convW[:, None].astype(i32),
+                 jnp.ones((window, 1), i32)], axis=1)         # windowed
+            has_acc = fb > 0
+            jm1 = jnp.maximum(fb - 1, 0)
+            st2 = st._replace(
+                k=k + fb,
+                beta=jnp.where(has_acc, betasW[jm1], st.beta),
+                c=jnp.where(has_acc, csW[jm1], st.c),
+                grad=jnp.where(has_acc, gradsW[jm1], st.grad),
+                step=jnp.where(has_acc, stepsW[jm1], st.step),
+                betas=st.betas.at[rows].set(betasW, mode="drop"),
+                cs=st.cs.at[rows].set(csW, mode="drop"),
+                diag=st.diag.at[rows].set(drows, mode="drop"))
+
+            def repair(st2):
+                # in-graph sequential branch for the first violating point:
+                # resume the KKT loop from the scan's round-1 outputs
+                lam_j = lams_pad[st2.k]
+                # (mask, beta, c, grad, viols, nv, total, rounds, iters,
+                #  conv, step, ovf)
+                rs0 = (masksW[fb], betasW[fb], csW[fb], gradsW[fb],
+                       violsW[fb], nvW[fb].astype(i32), nvW[fb].astype(i32),
+                       jnp.asarray(1, i32), itersW[fb].astype(i32),
+                       convW[fb], stepsW[fb], jnp.asarray(False))
+
+                def rcond(rs):
+                    return (rs[5] > 0) & (rs[7] < kkt_rounds) & (~rs[11])
+
+                def rbody(rs):
+                    (mask_r, beta_r, c_r, grad_r, viols_r, _, total_r,
+                     rounds_r, it_r, cv_r, step_r, _ovf) = rs
+                    mask_n = mask_r | viols_r        # violators re-enter
+                    ovf = jnp.sum(mask_n) > width
+
+                    def solve_round(_):
+                        (beta_f, c_f, grad_f, viols_f, nv_f, it_f, cv_f,
+                         step_f) = _point_solve(
+                            prob, Xp, penalty, mask_n, beta_r, c_r, lam_j,
+                            jnp.minimum(step_r * STEP_REGROW, 1.0), tol,
+                            key, width=width, max_iters=max_iters,
+                            check_kkt=check_kkt)
+                        return (mask_n, beta_f, c_f, grad_f, viols_f,
+                                nv_f.astype(i32), total_r + nv_f.astype(i32),
+                                rounds_r + 1, it_f.astype(i32), cv_f,
+                                step_f, jnp.asarray(False))
+
+                    def overflowed(_):
+                        return (mask_r, beta_r, c_r, grad_r, viols_r,
+                                jnp.asarray(0, i32), total_r, rounds_r,
+                                it_r, cv_r, step_r, jnp.asarray(True))
+
+                    return jax.lax.cond(ovf, overflowed, solve_round, None)
+
+                (mask_r, beta_r, c_r, grad_r, _, _, total_r, _, it_r, cv_r,
+                 step_r, ovf) = jax.lax.while_loop(rcond, rbody, rs0)
+
+                def commit(st2):
+                    kr = st2.k
+                    # gap/no-screen host loops run with check_kkt=False and
+                    # record zero violations — mirror that convention
+                    nv_rec = total_r if check_kkt else jnp.asarray(0, i32)
+                    drow = jnp.concatenate([
+                        _diag_counts(mask_r, beta_r, kgW[fb], kvW[fb], gid,
+                                     m=m),
+                        jnp.stack([nv_rec, it_r, cv_r.astype(i32),
+                                   jnp.asarray(0, i32)])])
+                    return st2._replace(
+                        k=kr + 1, beta=beta_r, c=c_r, grad=grad_r,
+                        step=step_r,
+                        betas=st2.betas.at[kr].set(beta_r),
+                        cs=st2.cs.at[kr].set(c_r),
+                        diag=st2.diag.at[kr].set(drow))
+
+                def abort(st2):
+                    # the repair mask outgrew the width cap: discard the
+                    # partial repair (the carried state stays at the last
+                    # accepted point) and hand back to the host driver
+                    return st2._replace(stop=jnp.asarray(True))
+
+                return jax.lax.cond(ovf, abort, commit, st2)
+
+            return jax.lax.cond(fb < W_eff, repair, lambda s: s, st2)
+
+        return jax.lax.cond(overflow, declined, attempt, st)
+
+    st0 = _DevState(jnp.asarray(k0, i32), beta, jnp.asarray(c, dt), grad,
+                    jnp.asarray(step0, dt), jnp.zeros((l, p), dt),
+                    jnp.zeros((l,), dt), jnp.zeros((l, 10), i32),
+                    jnp.asarray(False))
+    st = jax.lax.while_loop(cond, body, st0)
+    return st.k, st.beta, st.c, st.grad, st.step, st.betas, st.cs, st.diag
 
 
 class PathEngine:
@@ -371,3 +622,36 @@ class PathEngine:
             self.step_size, self.config.tol, self.key, width=width,
             window=len(lam_win), max_iters=self.config.max_iters,
             mode=self.config.screen)
+
+    # -- device-resident driver ----------------------------------------------
+
+    def device_width(self) -> int:
+        """The padded upper-bound bucket the device loop solves at: the
+        power-of-two cover of ``window_width_cap`` (the whole design for
+        no-screen fits, whose union is every column)."""
+        p = self.prob.p
+        if self.config.screen is None:
+            return p
+        return bucket_width(min(self.config.window_width_cap, p), p,
+                            self.config.bucket_min)
+
+    def device_run(self, lams, k0: int, beta, c, grad):
+        """Run the remaining path (from point ``k0``) as ONE compiled device
+        program (:func:`device_path_step`).  Returns host-side
+        ``(k_stop, beta, c, grad, betas [l,p], cs [l], diag [l,10])`` in a
+        single transfer, with (beta, c, grad, ``step_size``) primed for the
+        host loop to resume at ``k_stop``."""
+        cfg = self.config
+        width = self.device_width()
+        self.widths.add(width)
+        dt = self.prob.X.dtype
+        (k_stop, beta, c, grad, step, betas, cs, diag) = device_path_step(
+            self.prob, self.Xp, self.penalty, jnp.asarray(lams, dt), k0,
+            beta, jnp.asarray(c, dt), grad, self.step_size, cfg.tol,
+            self.key, width=width, window=cfg.window,
+            max_iters=cfg.max_iters, kkt_rounds=cfg.kkt_max_rounds,
+            mode=cfg.screen, check_kkt=cfg.check_kkt)
+        self.step_size = step
+        # the ONE host transfer for the whole device-resident stretch
+        return (int(k_stop), beta, c, grad, np.asarray(betas),
+                np.asarray(cs), np.asarray(diag))

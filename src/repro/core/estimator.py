@@ -321,11 +321,20 @@ class SGL:
         for k in ("center", "scale", "v", "w"):
             setattr(self, k + "_", d[k] if k in d else None)
         l = len(self.lambdas_)
-        # saves from before the lambda-window engine lack diag_windowed:
-        # those paths were sequential by construction
-        diag = {f: (d[f"diag_{f}"] if f"diag_{f}" in d
-                    else np.zeros((l,), bool))
-                for f in PathDiagnostics.__dataclass_fields__}
+        # saves from before the lambda-window engine lack diag_windowed, and
+        # pre-device-driver saves lack the scalar diag_window_mode: those
+        # paths were sequential by construction.  ONLY those two fields may
+        # default — any other missing diag_* key means a truncated/corrupt
+        # save and must raise, not fabricate diagnostics.
+        diag = {}
+        for f in PathDiagnostics.__dataclass_fields__:
+            if f == "window_mode":
+                diag[f] = (bool(d["diag_window_mode"])
+                           if "diag_window_mode" in d else False)
+            elif f == "windowed" and "diag_windowed" not in d:
+                diag[f] = np.zeros((l,), bool)
+            else:
+                diag[f] = d[f"diag_{f}"]
         self.diagnostics_ = PathDiagnostics(**diag)
         self._device_path = None
 

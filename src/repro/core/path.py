@@ -130,6 +130,12 @@ class PathDiagnostics:
     #                             ``window_hit_rate``) — low values mean the
     #                             path left the small-width regime early or
     #                             KKT fallbacks kept breaking windows
+    window_mode: bool = False   # a window or device driver was REQUESTED
+    #                             for this fit: summary() reports the
+    #                             hit-rate line whenever True — a requested
+    #                             window mode that accepted zero windows is
+    #                             a "hit-rate 0.00" diagnostic worth
+    #                             surfacing, not silence
 
     @classmethod
     def from_lists(cls, d: dict) -> "PathDiagnostics":
@@ -140,7 +146,8 @@ class PathDiagnostics:
         defaults = {"windowed": [False] * length}
         return cls(**{k: np.asarray(d.get(k, defaults.get(k)),
                                     dtype=kinds.get(k, np.int64))
-                      for k in _DIAG_FIELDS})
+                      for k in _DIAG_FIELDS},
+                   window_mode=bool(d.get("window_mode", False)))
 
     # -- dict-of-lists backward compatibility -------------------------------
     def __getitem__(self, key: str) -> list:
@@ -168,8 +175,11 @@ class PathDiagnostics:
         n = len(self)
         if n == 0:
             return "PathDiagnostics: empty path"
+        # report whenever window/device mode was REQUESTED: a fit that
+        # accepted zero windows must say "hit-rate 0.00", not stay silent
+        # (windowed.any() alone keeps pre-window recorders quiet)
         win = (f" | window hit-rate {self.window_hit_rate:.2f}"
-               if self.windowed.any() else "")
+               if (self.window_mode or self.windowed.any()) else "")
         return (f"PathDiagnostics: {n} points | input prop "
                 f"{self.opt_prop_v.mean():.3f} (vars) / "
                 f"{self.opt_prop_g.mean():.3f} (groups) | "
@@ -231,6 +241,26 @@ def _record(metrics, g: GroupInfo, beta, cand: Optional[ScreenResult], opt_mask,
     metrics["windowed"].append(bool(windowed))
 
 
+def _record_counts(metrics, row, p: int, m: int):
+    """Append one device-computed diagnostics row — the 6
+    ``engine._diag_counts`` counters plus the (kkt_viols, iters, converged,
+    windowed) tail — to the metrics lists.  The host-side decoder of the
+    device driver's ONE end-of-path transfer."""
+    ag, av, cg, cv, og, ov, kv, it, conv, wn = (int(x) for x in row)
+    metrics["active_g"].append(ag)
+    metrics["active_v"].append(av)
+    metrics["cand_g"].append(cg)
+    metrics["cand_v"].append(cv)
+    metrics["opt_g"].append(og)
+    metrics["opt_v"].append(ov)
+    metrics["kkt_viols"].append(kv)
+    metrics["iters"].append(it)
+    metrics["converged"].append(bool(conv))
+    metrics["opt_prop_v"].append(ov / p)
+    metrics["opt_prop_g"].append(og / m)
+    metrics["windowed"].append(bool(wn))
+
+
 # ---------------------------------------------------------------------------
 # the driver
 # ---------------------------------------------------------------------------
@@ -265,6 +295,13 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
         lam1 = float(path_start(prob, penalty, method=cfg.eps_method))
         lambdas = lambda_path(lam1, cfg.length, cfg.term)
     lambdas = np.asarray(lambdas, dtype=np.float64)
+    # the grid the jitted steps consume is cast ONCE to the problem dtype:
+    # feeding host float64 scalars into f32-jitted steps weak-promotes the
+    # lambda arithmetic inside every kernel and — with x64 enabled — traces
+    # a second (f64-lambda) signature of each shared step alongside the
+    # window path's dtype-cast one, churning the compile cache within a
+    # single fit.  The float64 grid is kept for the returned PathResult.
+    lams_x = lambdas.astype(prob.X.dtype)
     l = len(lambdas)
     p = prob.p
 
@@ -302,16 +339,36 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
     # host-adaptive per point.
     use_window = cfg.window > 1 and cfg.screen != "gap_dynamic"
     force_seq_k = -1          # point that must run sequentially (fallback)
+    metrics["window_mode"] = use_window or cfg.driver == "device"
 
     k = k0
+    # driver="device": the whole lambda-path loop runs as ONE compiled
+    # program (engine.device_path_step) — zero host syncs per window, one
+    # diagnostics transfer per path.  The device loop hands back (k_stop < l)
+    # only when a union candidate set or repair mask outgrows the
+    # window_width_cap bucket; the host loop below then drives the remaining
+    # large-active-set tail exactly as driver="host" would.
+    if cfg.driver == "device" and k < l:
+        t0 = time.perf_counter()
+        (k, beta, c, grad, bs_dev, cs_dev,
+         diag_dev) = engine.device_run(lams_x, k0, beta, c, grad)
+        t_solve += time.perf_counter() - t0
+        betas[k0:k] = bs_dev[k0:k]
+        intercepts[k0:k] = cs_dev[k0:k]
+        for j in range(k0, k):
+            _record_counts(metrics, diag_dev[j], p, penalty.g.m)
+        if cfg.verbose and k > k0:
+            print(f"[path] device driver solved points {k0}..{k - 1}"
+                  + ("" if k == l else f"; host loop resumes at {k}"))
+
     while k < l:
-        lam_k, lam = lambdas[max(k - 1, 0)], lambdas[k]
+        lam_k, lam = lams_x[max(k - 1, 0)], lams_x[k]
         W = min(cfg.window, l - k)
         pre = None            # point-k screen prepaid by a declined window
 
         if use_window and W > 1 and k != force_seq_k:
             t0 = time.perf_counter()
-            lam_win = lambdas[k:k + W]
+            lam_win = lams_x[k:k + W]
             if W < cfg.window:
                 # pad tail windows to the compiled window length by
                 # repeating the last lambda: `window` is a jit static, so a
@@ -320,7 +377,8 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
                 # (converging in ~1 iteration) and their outputs are
                 # discarded below via first_bad <= W
                 lam_win = np.concatenate(
-                    [lam_win, np.full(cfg.window - W, lam_win[-1])])
+                    [lam_win, np.full(cfg.window - W, lam_win[-1],
+                                      dtype=lams_x.dtype)])
             if cfg.screen is None:
                 union_mask, ucount = full_mask, p
             else:
@@ -368,6 +426,14 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
                     force_seq_k = k    # sequential KKT loop repairs it
                 if first_bad > 0:
                     continue
+            elif ucount > 0:
+                # the union bucket outgrew the cap: on a decreasing grid the
+                # active set only grows, so stop paying speculative window
+                # screens for the rest of the path (the device driver hands
+                # back permanently at exactly this point).  All-null windows
+                # (ucount == 0, the path head) keep trying — the active set
+                # will grow INTO the windowing regime.
+                use_window = False
             # declined (union bucket over the cap) or all-null window: fall
             # through to the sequential body — `pre` carries point k's
             # already-computed screen so nothing is paid twice

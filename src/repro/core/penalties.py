@@ -69,7 +69,10 @@ def sgl_prox(z: jnp.ndarray, t, g: GroupInfo, alpha: float) -> jnp.ndarray:
     """
     u = soft_threshold(z, t * alpha)
     norms = group_l2(u, g)                       # [m]
-    thr = t * (1.0 - alpha) * g.sqrt_sizes       # [m]
+    # follow the iterate dtype: sqrt_sizes is float64 whenever x64 is
+    # enabled, and an un-cast threshold would promote an f32 solve's
+    # while_loop carry to f64 (a trace-time crash, not just a slowdown)
+    thr = (t * (1.0 - alpha) * g.sqrt_sizes).astype(u.dtype)   # [m]
     scale = jnp.where(norms > 0, jnp.maximum(0.0, 1.0 - thr / jnp.where(norms > 0, norms, 1.0)), 0.0)
     return expand(scale, g) * u
 
@@ -125,7 +128,7 @@ def asgl_prox(z: jnp.ndarray, t, g: GroupInfo, alpha: float,
     """prox_{t ||.||_asgl}(z): weighted soft-threshold then group shrink."""
     u = soft_threshold(z, t * alpha * v)
     norms = group_l2(u, g)
-    thr = t * (1.0 - alpha) * w * g.sqrt_sizes
+    thr = (t * (1.0 - alpha) * w * g.sqrt_sizes).astype(u.dtype)
     scale = jnp.where(norms > 0, jnp.maximum(0.0, 1.0 - thr / jnp.where(norms > 0, norms, 1.0)), 0.0)
     return expand(scale, g) * u
 
@@ -185,7 +188,8 @@ class Penalty:
     def prox_group(self, z, t):
         w = self.w if self.adaptive else 1.0
         norms = group_l2(z, self.g)
-        thr = t * (1.0 - self.alpha) * w * self.g.sqrt_sizes
+        thr = (t * (1.0 - self.alpha) * w
+               * self.g.sqrt_sizes).astype(z.dtype)
         scale = jnp.where(norms > 0, jnp.maximum(0.0, 1.0 - thr / jnp.where(norms > 0, norms, 1.0)), 0.0)
         return expand(scale, self.g) * z
 
@@ -195,8 +199,12 @@ class Penalty:
 # ---------------------------------------------------------------------------
 
 def restrict_penalty(penalty: Penalty, mask: jnp.ndarray, idx_pad: jnp.ndarray,
-                     width: int) -> Penalty:
+                     width: int, dtype=None) -> Penalty:
     """Penalty for the restricted problem gathered by ``idx_pad`` (jit-safe).
+
+    ``dtype`` (the solve's iterate dtype) casts the carried weights so an
+    f32 restricted solve under x64 is not silently promoted to f64 by the
+    float64 ``sqrt_sizes`` — a no-op whenever the dtypes already agree.
 
     ``idx_pad`` is ascending (``jnp.nonzero`` order) and groups are
     contiguous index ranges, so group g occupies the contiguous slots
@@ -224,4 +232,7 @@ def restrict_penalty(penalty: Penalty, mask: jnp.ndarray, idx_pad: jnp.ndarray,
         v_sub = v_ext[idx_pad]
     else:
         v_sub = jnp.ones((width,), sqrt_full.dtype)
+    if dtype is not None:
+        w_sub = w_sub.astype(dtype)
+        v_sub = v_sub.astype(dtype)
     return Penalty(g_sub, penalty.alpha, v_sub, w_sub)

@@ -66,6 +66,7 @@ def fleet_vs_sequential_dev(X, Y, g, alphas, cfg, dtype, loss="linear",
 # batched-vs-sequential equivalence
 # ---------------------------------------------------------------------------
 
+@pytest.mark.tier2
 @pytest.mark.parametrize("loss", ["linear", "logistic"])
 def test_fleet_matches_sequential_16_problems_x64(loss):
     """The acceptance bar: a 16-problem shared-design fleet matches
@@ -172,6 +173,7 @@ def test_fleet_user_grids():
 # fleet lambda-window mode: windowed == sequential
 # ---------------------------------------------------------------------------
 
+@pytest.mark.tier2
 def test_fleet_windowed_matches_sequential_16_lanes_x64():
     """The [B] problem axis composed with the [W] window axis: a 16-lane
     windowed fleet matches the window=1 fleet AND per-problem fit_path to
@@ -221,6 +223,71 @@ def test_fleet_windowed_matches_sequential_other_modes(mode):
                                   - frw.results[b].betas)))
               for b in range(4))
     assert dev < 1e-10, (mode, dev)
+
+
+# ---------------------------------------------------------------------------
+# fleet device-resident driver: device == host, lockstep lanes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier2
+def test_fleet_device_matches_host_16_lanes_x64():
+    """driver="device" for a 16-lane fleet == the host fleet driver AND
+    per-problem sequential device fits, to <1e-10 in x64 (the acceptance
+    contract for the batched fleet)."""
+    X, Y, g, alphas = shared_problems(B=16, n=50, p=96, m=8)
+    with enable_x64():
+        cfg = FitConfig(screen="dfr", length=8, term=0.2, tol=1e-12,
+                        dtype="float64", window=4, window_width_cap=256)
+        cfgd = cfg.replace(driver="device")
+        grids = shared_fleet_lambda_grids(X, Y, g, alphas, config=cfg,
+                                          dtype=jnp.float64)
+        fleet = make_shared_fleet(X, Y, g, alphas, dtype=jnp.float64)
+        fr_host = fit_fleet_path(fleet, grids, config=cfg, user_grid=False)
+        fr_dev = fit_fleet_path(fleet, grids, config=cfgd, user_grid=False)
+        dev = 0.0
+        for b in range(16):
+            dev = max(dev, float(np.max(np.abs(
+                fr_host.results[b].betas - fr_dev.results[b].betas))))
+            prob = Problem(jnp.asarray(X, jnp.float64),
+                           jnp.asarray(Y[b], jnp.float64), "linear", True)
+            r = fit_path(prob, Penalty(g, float(alphas[b])), config=cfgd)
+            dev = max(dev, float(np.max(np.abs(
+                r.betas - fr_dev.results[b].betas))))
+    assert dev < 1e-10, dev
+    hit = np.mean([fr_dev.results[b].diagnostics.window_hit_rate
+                   for b in range(16)])
+    assert hit > 0.5, hit
+    assert all(r.diagnostics.window_mode for r in fr_dev.results)
+
+
+def test_fleet_device_smoke_and_handback():
+    """Small fleet through the device loop, plus the width-cap hand-back
+    (device stops, host tail completes — identical solutions)."""
+    X, Y, g, alphas = shared_problems(B=4, seed=23)
+    with enable_x64():
+        cfg = FitConfig(screen="dfr", length=6, term=0.25, tol=1e-12,
+                        dtype="float64")
+        grids = shared_fleet_lambda_grids(X, Y, g, alphas, config=cfg,
+                                          dtype=jnp.float64)
+        fleet = make_shared_fleet(X, Y, g, alphas, dtype=jnp.float64)
+        fr_host = fit_fleet_path(fleet, grids, config=cfg, user_grid=False)
+        fr_dev = fit_fleet_path(
+            fleet, grids, config=cfg.replace(driver="device", window=3,
+                                             window_width_cap=256),
+            user_grid=False)
+        fr_cap = fit_fleet_path(
+            fleet, grids, config=cfg.replace(driver="device", window=3,
+                                             window_width_cap=1),
+            user_grid=False)
+    for b in range(4):
+        assert np.max(np.abs(fr_host.results[b].betas
+                             - fr_dev.results[b].betas)) < 1e-10
+        np.testing.assert_array_equal(fr_host.results[b].betas,
+                                      fr_cap.results[b].betas)
+        assert not np.asarray(fr_cap.results[b].metrics["windowed"]).any()
+        # requested-but-never-engaged device mode still reports itself
+        assert "window hit-rate 0.00" in \
+            fr_cap.results[b].diagnostics.summary()
 
 
 def test_fleet_windowed_heterogeneous_buckets():
@@ -349,6 +416,7 @@ def _random_requests(seed, count):
     return reqs
 
 
+@pytest.mark.tier2
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 10_000), st.integers(1, 14), st.integers(2, 8),
        st.booleans())
@@ -379,6 +447,7 @@ def test_property_scheduler_assigns_every_request_exactly_once(
             assert B & (B - 1) == 0, B
 
 
+@pytest.mark.tier2
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 10_000), st.integers(1, 12))
 def test_property_scheduler_padded_shapes_pow2_and_minimal(seed, count):
@@ -404,6 +473,60 @@ def test_property_scheduler_padded_shapes_pow2_and_minimal(seed, count):
             assert p_pad == pow2_ceil(g.p + 1, 8)
             assert m_pad == pow2_ceil(g.m + 1)
             assert ms_pad == pow2_ceil(max(g.max_size, 1))
+
+
+# ---------------------------------------------------------------------------
+# shared-design keys: identity with STRONG references (id() reuse regression)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_equal_content_distinct_arrays_take_padded_path():
+    """Two equal-but-distinct design arrays must NOT form a shared-design
+    fleet: distinct objects mean distinct designs until proven otherwise —
+    they land in one padded stacked bucket instead."""
+    rng = np.random.default_rng(31)
+    g = GroupInfo.from_sizes([4] * 3)
+    X1 = rng.normal(size=(10, g.p))
+    X2 = X1.copy()                      # equal content, distinct object
+    grid = np.array([0.5, 0.4])
+    reqs = [FitRequest(X1, rng.normal(size=10), g, lambdas=grid),
+            FitRequest(X2, rng.normal(size=10), g, lambdas=grid)]
+    buckets = build_fleets(reqs, FitConfig())
+    assert len(buckets) == 1
+    assert not buckets[0].shared_design
+    assert buckets[0].fleet.n_eff is not None     # padded stacked bucket
+    # while the SAME object shared twice does share the design
+    reqs2 = [FitRequest(X1, rng.normal(size=10), g, lambdas=grid),
+             FitRequest(X1, rng.normal(size=10), g, lambdas=grid)]
+    buckets2 = build_fleets(reqs2, FitConfig())
+    assert len(buckets2) == 1 and buckets2[0].shared_design
+
+
+def test_scheduler_design_keys_hold_strong_refs():
+    """The design key must retain the keyed objects: ``id()`` of a
+    garbage-collected array can be recycled by a brand-new different array,
+    so a bare id-tuple key could silently alias two designs.  With
+    ``_IdKey`` the object cannot die while its key lives."""
+    import gc
+    import weakref
+
+    from repro.batch.scheduler import _IdKey, _design_key
+
+    g = GroupInfo.from_sizes([4] * 3)
+    X = np.random.default_rng(0).normal(size=(10, g.p))
+    req = FitRequest(X, np.zeros(10), g, lambdas=np.array([0.5, 0.4]))
+    key = _design_key(req)
+    ref = weakref.ref(req.X)
+    del X, req
+    gc.collect()
+    # the key alone keeps the array alive -> its id can never be recycled
+    # into a different design while the key is still usable
+    assert ref() is not None
+    assert key[0].obj is ref()
+    # identity semantics: same object -> equal keys; equal content -> not
+    a = np.ones((3, 2))
+    assert _IdKey(a) == _IdKey(a)
+    assert hash(_IdKey(a)) == hash(_IdKey(a))
+    assert _IdKey(a) != _IdKey(a.copy())
 
 
 # ---------------------------------------------------------------------------

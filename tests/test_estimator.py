@@ -184,6 +184,29 @@ def test_interpolate_exact_on_grid_and_between():
     assert np.array_equal(b_lo, est.coef_path_[-1])
 
 
+@pytest.mark.parametrize("loss", ["linear", "logistic"])
+def test_interpolate_endpoint_inclusivity_both_losses(loss):
+    """The exact fitted endpoints must resolve on BOTH ends for BOTH losses
+    — including after the float64 -> float32 -> float round-trip a serving
+    caller typically performs — and return the endpoint rows exactly."""
+    X, y, g = synth(loss=loss)
+    est = SGL(g, loss=loss, length=6, term=0.25).fit(X, y)
+    for idx in (0, -1):
+        lam = float(est.lambdas_[idx])
+        b, c = est.interpolate(lam)
+        assert np.array_equal(b, est.coef_path_[idx]), (loss, idx)
+        assert c == float(est.intercept_path_[idx])
+        # f32 round-trip noise exactly at the boundary stays inclusive
+        b32, _ = est.interpolate(float(np.float32(lam)))
+        assert np.max(np.abs(b32 - est.coef_path_[idx])) < 1e-5
+    # one ulp beyond either end is still outside
+    hi, lo = float(est.lambdas_[0]), float(est.lambdas_[-1])
+    with pytest.raises(ValueError, match="outside the fitted path range"):
+        est.interpolate(hi * 1.001)
+    with pytest.raises(ValueError, match="outside the fitted path range"):
+        est.interpolate(lo * 0.999)
+
+
 def test_score_linear_r2_and_logistic_accuracy():
     X, y, g = synth()
     est = SGL(g, length=6, term=0.2).fit(X, y)
@@ -233,6 +256,73 @@ def test_unfitted_and_bad_inputs():
         SGL(g, loss="poisson")
     with pytest.raises(ValueError):
         SGL(g, alpha=2.0)
+
+
+def test_estimator_device_driver_matches_host():
+    """driver="device" threads through the sklearn layer: same coefficients
+    as the host driver and a reported hit-rate."""
+    X, y, g = synth(seed=9)
+    kw = dict(length=8, term=0.3, window=4, window_width_cap=256, tol=1e-6)
+    e_host = SGL(g, **kw).fit(X, y)
+    e_dev = SGL(g, driver="device", **kw).fit(X, y)
+    assert np.max(np.abs(e_host.coef_path_ - e_dev.coef_path_)) < 5e-5
+    assert e_dev.diagnostics_.window_mode
+    assert "window hit-rate" in e_dev.diagnostics_.summary()
+
+
+# ---------------------------------------------------------------------------
+# diagnostics summary gating + pre-window/pre-device back-compat
+# ---------------------------------------------------------------------------
+
+def test_summary_reports_zero_hit_rate_when_requested():
+    """A window/device-mode fit that accepted ZERO windows must still report
+    `window hit-rate 0.00` — silence is indistinguishable from "windows were
+    never requested"."""
+    from repro.core.path import PathDiagnostics
+    l = 4
+    base = {k: [1] * l for k in ("active_g", "cand_g", "opt_g", "active_v",
+                                 "cand_v", "opt_v", "kkt_viols", "iters")}
+    base.update(converged=[True] * l, opt_prop_v=[0.1] * l,
+                opt_prop_g=[0.1] * l, windowed=[False] * l)
+    # requested window mode, zero accepted windows -> 0.00 reported
+    d = PathDiagnostics.from_lists(dict(base, window_mode=True))
+    assert d.window_hit_rate == 0.0
+    assert "window hit-rate 0.00" in d.summary()
+    # pre-window recorder (no window keys at all) -> no hit-rate line
+    d0 = PathDiagnostics.from_lists(dict(base))
+    assert "window hit-rate" not in d0.summary()
+    # accepted windows always report, requested or not
+    d1 = PathDiagnostics.from_lists(
+        dict(base, windowed=[True] * l, window_mode=False))
+    assert "window hit-rate 1.00" in d1.summary()
+
+
+def test_window_mode_survives_npz_and_pre_window_saves(tmp_path):
+    """diag_window_mode round-trips through save()/load(); saves written
+    before the window/device drivers (no diag_windowed / diag_window_mode
+    keys) still load with sequential defaults."""
+    X, y, g = synth(seed=10)
+    est = SGL(g, length=5, term=0.3, window=4,
+              window_width_cap=256).fit(X, y)
+    assert est.diagnostics_.window_mode
+    f = os.path.join(tmp_path, "w.npz")
+    est.save(f)
+    est2 = load(f)
+    assert est2.diagnostics_.window_mode is True
+    assert np.array_equal(est2.diagnostics_.windowed,
+                          est.diagnostics_.windowed)
+    # strip the window-era keys to fake a pre-window save
+    with np.load(f, allow_pickle=False) as fh:
+        d = {k: fh[k] for k in fh.files
+             if k not in ("diag_windowed", "diag_window_mode")}
+    f_old = os.path.join(tmp_path, "old.npz")
+    np.savez(f_old, **d)
+    est3 = load(f_old)
+    assert est3.diagnostics_.window_mode is False
+    assert not est3.diagnostics_.windowed.any()
+    assert "window hit-rate" not in est3.diagnostics_.summary()
+    # predictions unaffected by the missing diagnostics
+    assert np.array_equal(est3.predict(X), est.predict(X))
 
 
 # ---------------------------------------------------------------------------

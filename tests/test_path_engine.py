@@ -322,6 +322,160 @@ def test_window_survives_config_roundtrip():
 
 
 # ---------------------------------------------------------------------------
+# device-resident while_loop driver: device == host
+# ---------------------------------------------------------------------------
+
+def _device_vs_host(prob, pen, base):
+    r_host = fit_path(prob, pen, config=base)
+    r_dev = fit_path(prob, pen, config=base.replace(driver="device"))
+    return r_host, r_dev
+
+
+@pytest.mark.parametrize("loss,mode", [("linear", "dfr"),
+                                       ("logistic", "dfr")])
+def test_device_driver_matches_host(loss, mode):
+    """driver="device" == driver="host" to <1e-10 in x64 (the acceptance
+    contract; the full screen-mode sweep runs in tier-2)."""
+    with enable_x64():
+        prob, g = synth64(loss=loss)
+        pen = Penalty(g, 0.95)
+        base = FitConfig(screen=mode, length=10, term=0.2, tol=1e-12,
+                         dtype="float64", window=4, window_width_cap=256)
+        r_host, r_dev = _device_vs_host(prob, pen, base)
+    assert np.max(np.abs(r_host.betas - r_dev.betas)) < 1e-10, (loss, mode)
+    assert np.max(np.abs(r_host.intercepts - r_dev.intercepts)) < 1e-10
+    assert r_dev.diagnostics.window_hit_rate > 0.5
+    assert r_dev.diagnostics.window_mode
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("loss,mode", [
+    ("linear", "sparsegl"), ("linear", "gap"), ("linear", None),
+    ("logistic", "sparsegl"), ("logistic", None)])
+def test_device_driver_matches_host_all_modes(loss, mode):
+    """The rest of the windowing-eligible (loss, screen) grid."""
+    with enable_x64():
+        prob, g = synth64(loss=loss)
+        pen = Penalty(g, 0.95)
+        base = FitConfig(screen=mode, length=10, term=0.2, tol=1e-12,
+                         dtype="float64", window=4, window_width_cap=256)
+        r_host, r_dev = _device_vs_host(prob, pen, base)
+    assert np.max(np.abs(r_host.betas - r_dev.betas)) < 1e-10, (loss, mode)
+    assert np.max(np.abs(r_host.intercepts - r_dev.intercepts)) < 1e-10
+
+
+@pytest.mark.tier2
+def test_device_driver_matches_host_asgl():
+    with enable_x64():
+        prob, g = synth64(seed=3)
+        v, w = pca_weights(prob.X, g, 0.1, 0.1)
+        pen = Penalty(g, 0.95, v, w)
+        base = FitConfig(screen="dfr", length=10, term=0.2, tol=1e-12,
+                         dtype="float64", adaptive=True, window=4,
+                         window_width_cap=256)
+        r_host, r_dev = _device_vs_host(prob, pen, base)
+    assert np.max(np.abs(r_host.betas - r_dev.betas)) < 1e-10
+
+
+def test_device_driver_kkt_repair_in_graph():
+    """A real mid-window KKT violation: the device loop's in-graph repair
+    branch must reproduce the host driver's fallback bit-for-bit — same
+    betas, same recorded violations, the repaired point not windowed."""
+    with enable_x64():
+        prob, g = strong_rule_violation_problem()
+        pen = Penalty(g, 1.0)
+        base = FitConfig(screen="dfr", length=30, term=0.05, tol=1e-12,
+                         dtype="float64", window=4, window_width_cap=64)
+        r_host = fit_path(prob, pen, config=base.replace(window=1))
+        viols = np.asarray(r_host.metrics["kkt_viols"])
+        assert viols.sum() > 0, "construction must trigger a KKT violation"
+        k_viol = int(np.where(viols > 0)[0][0])
+        r_dev = fit_path(prob, pen, config=base.replace(driver="device"))
+    assert np.max(np.abs(r_host.betas - r_dev.betas)) < 1e-10
+    np.testing.assert_array_equal(viols,
+                                  np.asarray(r_dev.metrics["kkt_viols"]))
+    assert not np.asarray(r_dev.metrics["windowed"])[k_viol]
+
+
+def test_device_driver_hands_back_to_host():
+    """A width cap below the active set: the device loop must hand back and
+    the host tail must complete the path — identical solutions, zero
+    windowed points, and a 0.00 hit-rate that summary() still reports."""
+    prob, g = synth(seed=4)
+    pen = Penalty(g, 0.95)
+    base = FitConfig(screen="dfr", length=8, term=0.2, tol=1e-6)
+    r_host = fit_path(prob, pen, config=base)
+    r_dev = fit_path(prob, pen, config=base.replace(driver="device",
+                                                    window=4,
+                                                    window_width_cap=1))
+    np.testing.assert_array_equal(r_host.betas, r_dev.betas)
+    assert r_dev.diagnostics.window_hit_rate == 0.0
+    assert "window hit-rate 0.00" in r_dev.diagnostics.summary()
+
+
+def test_device_driver_user_grid_and_window1():
+    """Device driver with an explicit grid head below lambda_1 and the
+    degenerate window=1 (per-point while_loop) configuration."""
+    from repro.core import path_start
+    prob, g = synth(seed=12)
+    pen = Penalty(g, 0.95)
+    lam1 = float(path_start(prob, pen))
+    grid = np.array([lam1, 0.6 * lam1, 0.45 * lam1])
+    r_host = fit_path(prob, pen, lambdas=grid, screen="dfr", tol=1e-6)
+    r_dev = fit_path(prob, pen, lambdas=grid,
+                     config=FitConfig(screen="dfr", tol=1e-6, driver="device",
+                                      window=1, window_width_cap=256))
+    assert np.max(np.abs(r_host.betas - r_dev.betas)) < 5e-5
+
+
+def test_device_config_validation_and_statics():
+    with pytest.raises(ValueError, match="driver"):
+        FitConfig(driver="gpu")
+    with pytest.raises(ValueError, match="gap_dynamic"):
+        FitConfig(driver="device", screen="gap_dynamic")
+    # driver is a per-call static on the device step only — it must NOT
+    # enter EngineKey (host and device fits share every sequential/window
+    # compilation), and it must survive the json round-trip
+    assert FitConfig().engine_key == FitConfig(driver="device").engine_key
+    cfg = FitConfig(driver="device", window=8)
+    assert FitConfig.from_json(cfg.to_json()) == cfg
+    # pre-device configs (no "driver" key) load as host
+    d = cfg.to_dict()
+    del d["driver"]
+    assert FitConfig.from_dict(d).driver == "host"
+
+
+# ---------------------------------------------------------------------------
+# lambda-grid dtype hygiene (regression: the driver casts the grid ONCE to
+# the problem dtype; f32 fits must not compile more step variants than f64)
+# ---------------------------------------------------------------------------
+
+def test_compile_count_f32_fit_not_more_than_f64():
+    from repro.core import engine as eng
+    steps = (eng.screen_step, eng.fused_path_step, eng.window_screen_step,
+             eng.windowed_path_step, eng.null_path_step, eng.gradient_step)
+
+    def count_fit(dtype, name):
+        for s in steps:
+            s.clear_cache()
+        prob, g = synth(seed=0)
+        prob = Problem(jnp.asarray(prob.X, dtype),
+                       jnp.asarray(prob.y, dtype), "linear", True)
+        pen = Penalty(g, 0.95)
+        cfg = FitConfig(screen="dfr", length=8, term=0.2, window=4,
+                        window_width_cap=256, dtype=name)
+        fit_path(prob, pen, config=cfg)
+        return sum(s._cache_size() for s in steps)
+
+    with enable_x64():
+        c64 = count_fit(jnp.float64, "float64")
+        c32 = count_fit(jnp.float32, "float32")
+    # an un-cast float64 grid would trace a second (f64-lambda) signature
+    # of the shared steps alongside the window path's dtype-cast one
+    assert c32 <= c64, (c32, c64)
+
+
+# ---------------------------------------------------------------------------
 # GAP-safe loss guard (regression: engine-level entry points must reject
 # logistic/adaptive problems, not just fit_path)
 # ---------------------------------------------------------------------------

@@ -21,6 +21,10 @@ All examples run under the deadline-free derandomized profile registered in
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+# hypothesis suites solve dozens of tightly converged problems per example:
+# the whole module runs in the tier-2 CI job (plain pytest still runs it)
+pytestmark = pytest.mark.tier2
 from hypothesis import given, settings, strategies as st
 from jax.experimental import enable_x64
 
