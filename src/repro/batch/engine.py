@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -54,11 +55,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.config import EngineKey, FitConfig
-from ..core.engine import STEP_REGROW, _diag_counts, bucket_width
+from ..core.engine import (STEP_REGROW, _diag_counts, active_claim,
+                           bucket_width)
 from ..core.groups import GroupInfo, expand, group_l2, to_padded
 from ..core.path import (PathResult, _metrics_init, _record, _record_counts,
                          lambda_path, path_start)
 from ..core.losses import Problem
+from ..core.validation import LaneDivergedWarning, UnconvergedPointsWarning
 from ..core.penalties import (Penalty, asgl_group_epsilon_norms, sgl_eps,
                               sgl_group_epsilon_norms, sgl_tau, soft_threshold)
 from ..core.epsilon_norm import epsilon_norm
@@ -306,7 +309,10 @@ def _screen_one(Xp, y, gid, gsizes, gstarts, alpha, v, w, n_eff, grad, beta,
     else:
         raise ValueError(f"unsupported batched screen mode {mode!r} "
                          f"(choose from {BATCH_SCREEN_MODES})")
-    mask = keep_v | (beta != 0)
+    # active_claim (not beta != 0): a diverged lane's NaN carry must not
+    # claim every coordinate active — that would overflow the shared width
+    # cap and collapse every SIBLING lane onto full-width solves
+    mask = keep_v | active_claim(beta)
     return keep_g, keep_v, mask
 
 
@@ -704,6 +710,7 @@ class _FleetDevState(NamedTuple):
     cs: jnp.ndarray         # [B, l]
     diag: jnp.ndarray       # [B, l, 10] int32 (core _DevState layout per lane)
     stop: jnp.ndarray       # bool
+    deadB: jnp.ndarray      # [B] bool: lane diverged (non-finite) — frozen
 
 
 @partial(jax.jit, static_argnames=("width", "window", "max_iters",
@@ -774,7 +781,16 @@ def fleet_device_step(fleet: Fleet, lamsB, k0, betaB, cB, gradB, stepB, tol,
                 *fargs, unionB, st.betaB, st.cB, st.gradB, lam_prevB,
                 lam_winB, st.stepB, tol)
             W_eff = jnp.minimum(window, l - k)
-            badB = (nvWB > 0) & (j_idx[None, :] < W_eff)
+            # non-finite carry detection, per lane: a freshly diverged lane
+            # truncates the accepted prefix like a KKT violation and gets
+            # ONE repair attempt; a lane already marked dead is frozen — its
+            # (visibly NaN) rows commit without dragging the 15 siblings
+            # into per-point repair rounds, since lanes are numerically
+            # independent and the caller quarantines on non-finite output
+            finWB = jnp.all(jnp.isfinite(betasWB), axis=2) & \
+                jnp.isfinite(csWB)
+            badB = ((nvWB > 0) | (~finWB & ~st.deadB[:, None])) & \
+                (j_idx[None, :] < W_eff)
             first_bad = jnp.where(badB.any(axis=1), jnp.argmax(badB, axis=1),
                                   window)
             gp = jnp.minimum(jnp.min(first_bad), W_eff).astype(i32)
@@ -878,12 +894,19 @@ def fleet_device_step(fleet: Fleet, lamsB, k0, betaB, cB, gradB, stepB, tol,
                         [done_diag, nv_rec[:, None], itB_f[:, None],
                          cvB_f[:, None].astype(i32),
                          jnp.zeros((B, 1), i32)], axis=1)
+                    # a lane whose repair came back non-finite has diverged
+                    # for real: freeze it (committed rows stay visibly NaN,
+                    # diagnostics record converged=False) so later windows
+                    # run at full speed for the healthy siblings
+                    fin_r = jnp.all(jnp.isfinite(betaB_f), axis=1) & \
+                        jnp.isfinite(cB_f)
                     return st2._replace(
                         k=kr + 1, betaB=betaB_f, cB=cB_f, gradB=gradB_f,
                         stepB=stepB_f,
                         betas=st2.betas.at[:, kr].set(betaB_f),
                         cs=st2.cs.at[:, kr].set(cB_f),
-                        diag=st2.diag.at[:, kr].set(drow))
+                        diag=st2.diag.at[:, kr].set(drow),
+                        deadB=st2.deadB | ~fin_r)
 
                 def abort(st2):
                     return st2._replace(stop=jnp.asarray(True))
@@ -894,9 +917,13 @@ def fleet_device_step(fleet: Fleet, lamsB, k0, betaB, cB, gradB, stepB, tol,
 
         return jax.lax.cond(overflow, declined, attempt, st)
 
+    # lanes whose INITIAL carry is already non-finite (e.g. a NaN y that
+    # bypassed admission: the null intercept is its mean) start dead
+    dead0 = ~(jnp.all(jnp.isfinite(betaB), axis=1) & jnp.isfinite(cB))
     st0 = _FleetDevState(jnp.asarray(k0, i32), betaB, cB, gradB, stepB,
                          jnp.zeros((B, l, p), dt), jnp.zeros((B, l), dt),
-                         jnp.zeros((B, l, 10), i32), jnp.asarray(False))
+                         jnp.zeros((B, l, 10), i32), jnp.asarray(False),
+                         dead0)
     st = jax.lax.while_loop(cond, body, st0)
     return (st.k, st.betaB, st.cB, st.gradB, st.stepB, st.betas, st.cs,
             st.diag)
@@ -1285,6 +1312,28 @@ def fit_fleet_path(fleet: Fleet, lambdas, *, config: FitConfig = None,
             print(f"[fleet {k:3d}/{l}] B={B} max|O_v|={int(counts.max())} "
                   f"viols={int(total_viols.sum())}")
         k += 1
+
+    # non-finite-carry surfacing: a diverged lane carries NaN rows (its
+    # siblings are untouched — lanes are numerically independent).  Warn
+    # with the lane ids instead of raising so healthy lanes' results
+    # survive the drain; fleet callers (the serving loop) quarantine on
+    # non-finite output per lane.
+    bad_lanes = [b for b in range(B)
+                 if not (np.isfinite(betas[b]).all()
+                         and np.isfinite(intercepts[b]).all())]
+    n_unc = sum(1 for b in range(B) for v in metrics[b]["converged"] if not v)
+    if n_unc and not bad_lanes:     # diverged lanes already warn below
+        warnings.warn(
+            f"{n_unc} accepted fleet path points exited at "
+            f"max_iters={cfg.max_iters} without meeting tol "
+            "(see each lane's PathDiagnostics.converged)",
+            UnconvergedPointsWarning, stacklevel=2)
+    if bad_lanes:
+        warnings.warn(
+            f"fleet lanes {bad_lanes} diverged (non-finite path values); "
+            "their results carry NaN and converged=False diagnostics — "
+            "sibling lanes are unaffected", LaneDivergedWarning,
+            stacklevel=2)
 
     buckets = tuple(sorted(engine.widths))
     results = []

@@ -31,6 +31,7 @@ from ..core.estimator import _FORMAT_VERSION, _as_group_info, _check_fitted
 from ..core.groups import GroupInfo
 from ..core.losses import standardize as standardize_columns
 from ..core.path import PathDiagnostics
+from ..core.validation import finite_ok
 from .engine import FleetResult, fit_fleet_path, make_shared_fleet
 from .scheduler import FitRequest, fit_fleet
 
@@ -124,6 +125,13 @@ class BatchedSGL:
         if X.shape[1] != g.p:
             raise ValueError(f"X must be [n, {g.p}] for these groups, "
                              f"got {X.shape}")
+        # one fleet-level front-door check: a single NaN row of Y would
+        # otherwise ride into a vmapped fleet as a diverged (NaN) lane
+        if not (finite_ok(X) and finite_ok(Y)):
+            raise ValueError(
+                "invalid inputs to BatchedSGL.fit: X or Y contains NaN/Inf "
+                "entries — validate or impute before fitting (per-lane "
+                "triage is the serving admission layer's job)")
         B = Y.shape[0]
         dt = self._dtype()
         if cfg.standardize:
@@ -260,15 +268,19 @@ class BatchedSGL:
         l = est.lambdas_.shape[1]
 
         # pre-window saves lack diag_windowed (and pre-device-driver saves
-        # the scalar diag_window_mode): sequential by construction.  ONLY
-        # those two fields may default — any other missing diag_* key means
-        # a truncated/corrupt save and must raise
+        # the scalar diag_window_mode): sequential by construction.  Saves
+        # from before the convergence-mask surfacing lack diag_converged:
+        # all-True preserves their implicit contract.  ONLY these three
+        # fields may default — any other missing diag_* key means a
+        # truncated/corrupt save and must raise
         def _field(f, b):
             if f == "window_mode":
                 return (bool(d["diag_window_mode"][b])
                         if "diag_window_mode" in d else False)
             if f == "windowed" and "diag_windowed" not in d:
                 return np.zeros((l,), bool)
+            if f == "converged" and "diag_converged" not in d:
+                return np.ones((l,), bool)
             return d[f"diag_{f}"][b]
 
         est.diagnostics_ = [

@@ -40,6 +40,7 @@ from ..core.groups import GroupInfo
 from ..core.losses import Problem
 from ..core.path import lambda_path, path_start
 from ..core.penalties import Penalty
+from ..core.validation import validate_inputs
 from .engine import Fleet, FleetResult, fit_fleet_path
 
 
@@ -74,15 +75,14 @@ class FitRequest:
         if not isinstance(self.groups, GroupInfo):
             self.groups = GroupInfo.from_sizes(
                 np.asarray(self.groups, np.int64))
-        y = np.asarray(self.y)
-        if y.ndim != 1 or y.shape[0] != np.shape(self.X)[0]:
-            raise ValueError(f"y must be [{np.shape(self.X)[0]}], "
-                             f"got {y.shape}")
-        if np.shape(self.X)[1] != self.groups.p:
-            raise ValueError(f"X must be [n, {self.groups.p}] for these "
-                             f"groups, got {np.shape(self.X)}")
-        if self.loss not in ("linear", "logistic"):
-            raise ValueError(f"unknown loss {self.loss!r}")
+        # the full structured sweep (shapes, group coverage, finiteness,
+        # degenerate designs, lambda grid) — fails at construction with a
+        # clear ValueError instead of a NaN lane inside a vmapped fleet.
+        # finite_ok's identity cache makes the X scan O(1) across the B
+        # requests of a shared-design fleet.
+        validate_inputs(self.X, np.asarray(self.y), groups=self.groups,
+                        lambdas=self.lambdas, loss=self.loss,
+                        where="FitRequest")
 
 
 @dataclasses.dataclass

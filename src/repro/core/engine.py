@@ -74,6 +74,20 @@ def extend_design(X) -> jnp.ndarray:
     return jnp.concatenate([X, jnp.zeros((X.shape[0], 1), X.dtype)], axis=1)
 
 
+def active_claim(beta):
+    """Activity mask ``beta != 0`` with non-finite entries EXCLUDED.
+
+    IEEE NaN compares unequal to zero, so a diverged carry would otherwise
+    claim EVERY coordinate active — blowing the screened bucket up to the
+    full design, overflowing the device driver's width cap, and (in a
+    fleet) collapsing every sibling lane onto full-width solves.  A
+    diverged iterate instead contributes an empty activity claim; the
+    divergence itself is surfaced through ``converged=False`` diagnostics
+    and the drivers' non-finite hand-back, never through the screen.
+    """
+    return (beta != 0) & jnp.isfinite(beta)
+
+
 def _screen_masks(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
                   key: EngineKey, mode: str):
     """The one screening-rule dispatch -> (keep_groups, keep_vars).
@@ -119,7 +133,7 @@ def screen_step(prob: Problem, penalty: Penalty, grad, beta, lam_k, lam_next,
     """
     keep_groups, keep_vars = _screen_masks(prob, penalty, grad, beta, lam_k,
                                            lam_next, key, mode)
-    mask = keep_vars | (beta != 0)
+    mask = keep_vars | active_claim(beta)
     return keep_groups, keep_vars, mask
 
 
@@ -130,7 +144,7 @@ def _window_union(prob: Problem, penalty: Penalty, grad, beta, lam_prev,
     driver's in-graph window screen, so both run the same rule."""
     keep_g0, keep_v0 = _screen_masks(prob, penalty, grad, beta, lam_prev,
                                      lam_win[0], key, mode)
-    mask0 = keep_v0 | (beta != 0)
+    mask0 = keep_v0 | active_claim(beta)
     if mode in ("dfr", "sparsegl"):
         # both rules are monotone in lam_next at fixed (grad, beta): the
         # keep threshold 2*lam_next - lam_prev shrinks as lam_next does, so
@@ -268,7 +282,7 @@ def _window_scan(prob: Problem, Xp, penalty: Penalty, union_mask, beta,
         else:
             keep_g, keep_v = _screen_masks(prob, penalty, grad_k, beta_full,
                                            lam_k, lam_j, key, mode)
-            mask_j = keep_v | (beta_full != 0)
+            mask_j = keep_v | active_claim(beta_full)
         sub_mask = jnp.concatenate([mask_j, mask_ext_false])[idx_pad]
         Xs_j = jnp.where(sub_mask[None, :], Xs, jnp.zeros((), Xs.dtype))
         prob_sub = Problem(Xs_j, prob.y, prob.loss, prob.intercept)
@@ -431,7 +445,14 @@ def device_path_step(prob: Problem, Xp, penalty: Penalty, lams, k0, beta, c,
                 lam_win, st.step, tol, key, width=width, window=window,
                 max_iters=max_iters, mode=mode)
             W_eff = jnp.minimum(window, l - k)
-            bad = (nvW > 0) & (j_idx < W_eff)
+            # non-finite carry detection: a diverged point must neither be
+            # accepted nor committed — it truncates the acceptable prefix
+            # exactly like a KKT violation, and (below) routes to hand-back
+            # instead of an in-graph repair that would re-diverge
+            finW = jax.vmap(
+                lambda b, cc: jnp.all(jnp.isfinite(b)) & jnp.isfinite(cc)
+            )(betasW, csW)
+            bad = ((nvW > 0) | ~finW) & (j_idx < W_eff)
             fb = jnp.minimum(jnp.where(bad.any(), jnp.argmax(bad), window),
                              W_eff).astype(i32)
             # accepted prefix: one batched scatter per stack, rejected and
@@ -497,6 +518,8 @@ def device_path_step(prob: Problem, Xp, penalty: Penalty, lams, k0, beta, c,
 
                 (mask_r, beta_r, c_r, grad_r, _, _, total_r, _, it_r, cv_r,
                  step_r, ovf) = jax.lax.while_loop(rcond, rbody, rs0)
+                nonfin = ~(jnp.all(jnp.isfinite(beta_r))
+                           & jnp.isfinite(c_r))
 
                 def commit(st2):
                     kr = st2.k
@@ -516,14 +539,23 @@ def device_path_step(prob: Problem, Xp, penalty: Penalty, lams, k0, beta, c,
                         diag=st2.diag.at[kr].set(drow))
 
                 def abort(st2):
-                    # the repair mask outgrew the width cap: discard the
-                    # partial repair (the carried state stays at the last
-                    # accepted point) and hand back to the host driver
+                    # the repair mask outgrew the width cap — or the repair
+                    # solve itself diverged: discard the partial repair (the
+                    # carried state stays at the last accepted point) and
+                    # hand back to the host driver
                     return st2._replace(stop=jnp.asarray(True))
 
-                return jax.lax.cond(ovf, abort, commit, st2)
+                return jax.lax.cond(ovf | nonfin, abort, commit, st2)
 
-            return jax.lax.cond(fb < W_eff, repair, lambda s: s, st2)
+            def repair_or_stop(st2):
+                # a non-finite first-bad point means the solve diverged, not
+                # that the screen missed: re-solving in-graph would diverge
+                # again, so hand back and let the host driver retry cleanly
+                return jax.lax.cond(finW[fb], repair,
+                                    lambda s: s._replace(
+                                        stop=jnp.asarray(True)), st2)
+
+            return jax.lax.cond(fb < W_eff, repair_or_stop, lambda s: s, st2)
 
         return jax.lax.cond(overflow, declined, attempt, st)
 

@@ -38,6 +38,7 @@ from .groups import GroupInfo
 from .losses import Problem, standardize as standardize_columns
 from .path import PathDiagnostics, PathResult, fit_path
 from .penalties import Penalty
+from .validation import validate_inputs
 
 _FORMAT_VERSION = 1
 
@@ -159,6 +160,10 @@ class SGL:
         if X.ndim != 2 or X.shape[1] != g.p:
             raise ValueError(f"X must be [n, {g.p}] for these groups, "
                              f"got {X.shape}")
+        # fail loudly up front — a non-finite y would otherwise surface as
+        # a NaN path (or a PathDivergedError) deep inside the drivers
+        validate_inputs(X, y, groups=g, lambdas=self.lambdas,
+                        loss=self.loss, where=f"{type(self).__name__}.fit")
         dt = self._dtype()
         if cfg.standardize:
             Xf, center, scale = standardize_columns(X, return_stats=True)
@@ -323,9 +328,12 @@ class SGL:
         l = len(self.lambdas_)
         # saves from before the lambda-window engine lack diag_windowed, and
         # pre-device-driver saves lack the scalar diag_window_mode: those
-        # paths were sequential by construction.  ONLY those two fields may
-        # default — any other missing diag_* key means a truncated/corrupt
-        # save and must raise, not fabricate diagnostics.
+        # paths were sequential by construction.  Saves from before the
+        # convergence-mask surfacing lack diag_converged: those recorders
+        # implicitly asserted convergence, so all-True preserves their
+        # contract.  ONLY these three fields may default — any other missing
+        # diag_* key means a truncated/corrupt save and must raise, not
+        # fabricate diagnostics.
         diag = {}
         for f in PathDiagnostics.__dataclass_fields__:
             if f == "window_mode":
@@ -333,6 +341,8 @@ class SGL:
                            if "diag_window_mode" in d else False)
             elif f == "windowed" and "diag_windowed" not in d:
                 diag[f] = np.zeros((l,), bool)
+            elif f == "converged" and "diag_converged" not in d:
+                diag[f] = np.ones((l,), bool)
             else:
                 diag[f] = d[f"diag_{f}"]
         self.diagnostics_ = PathDiagnostics(**diag)
@@ -419,6 +429,8 @@ class SGLCV(SGL):
         g = _as_group_info(groups if groups is not None else self.groups)
         X = np.asarray(X)
         y = np.asarray(y)
+        validate_inputs(X, y, groups=g, loss=self.loss,
+                        where="SGLCV.fit")
         # cv_fit_path reads standardize/fit_intercept off the config itself
         # (its full-data column stats match the refit's, below)
         cv = cv_fit_path(X, y, g, alphas=self.alphas, loss=self.loss,

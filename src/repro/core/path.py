@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional, Union
 
 import jax
@@ -53,11 +54,12 @@ import numpy as np
 
 from .adaptive import asgl_path_start
 from .config import FitConfig
-from .engine import PathEngine, bucket_width
+from .engine import PathEngine, active_claim, bucket_width
 from .groups import GroupInfo
 from .losses import Problem, gradient, residual
 from .penalties import Penalty, sgl_dual_norm
 from .screening import ScreenResult
+from .validation import PathDivergedError, UnconvergedPointsWarning
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +270,17 @@ def _record_counts(metrics, row, p: int, m: int):
 _UNSET = object()
 
 
+def _partial_result(lambdas, betas, intercepts, metrics, k, t_screen,
+                    t_solve, buckets) -> PathResult:
+    """The solved prefix ``[0, k)`` as a PathResult (attached to
+    :class:`~repro.core.validation.PathDivergedError` so callers degrading
+    down the driver ladder keep the work already done)."""
+    mm = {key: (v[:k] if isinstance(v, list) else v)
+          for key, v in metrics.items()}
+    return PathResult(lambdas[:k], betas[:k].copy(), intercepts[:k].copy(),
+                      mm, t_screen, t_solve, buckets=buckets)
+
+
 def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
              config: FitConfig = None, screen=_UNSET, solver: str = None,
              length: int = None, term: float = None, max_iters: int = None,
@@ -400,6 +413,16 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
                 first_bad = min(first_bad, W)  # padded tail points discarded
                 if first_bad > 0:
                     bW, cWnp = np.asarray(betasW), np.asarray(csW)
+                    # non-finite carry detection: a diverged point (NaN
+                    # produces no KKT violations — IEEE comparisons are
+                    # False — so nv alone would accept it) truncates the
+                    # prefix like a violation; the sequential body retries
+                    # the point and raises PathDivergedError if it diverges
+                    # again
+                    finW = np.isfinite(bW).all(axis=1) & np.isfinite(cWnp)
+                    if not finW[:first_bad].all():
+                        first_bad = int(np.argmax(~finW))
+                if first_bad > 0:
                     kg, kv = np.asarray(kgW), np.asarray(kvW)
                     mk = np.asarray(masksW)
                     it_np, cv_np = np.asarray(itersW), np.asarray(convW)
@@ -478,7 +501,7 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
         if cfg.screen == "gap_dynamic":
             for _ in range(3):
                 _, keep_v2, _ = engine.screen(grad, beta, lam, lam, "gap")
-                new_mask = (keep_v2 & mask) | (beta != 0)
+                new_mask = (keep_v2 & mask) | active_claim(beta)
                 new_count = int(jnp.sum(new_mask))
                 if new_count >= count:
                     break
@@ -493,6 +516,15 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
 
         betas[k] = np.asarray(beta)
         intercepts[k] = float(c)
+        if not (np.isfinite(betas[k]).all() and np.isfinite(intercepts[k])):
+            # hand back instead of committing a garbage tail: the solved
+            # prefix travels on the exception so ladder callers (the serving
+            # loop) keep the work already done
+            raise PathDivergedError(
+                k, partial=_partial_result(lambdas, betas, intercepts,
+                                           metrics, k, t_screen, t_solve,
+                                           tuple(sorted(engine.widths))),
+                detail=f"lambda={lambdas[k]:.4g}, driver={cfg.driver!r}")
         _record(metrics, penalty.g, betas[k], cand, np.asarray(mask), total_viols,
                 res_iters, res_conv)
         if cfg.verbose:
@@ -500,5 +532,16 @@ def fit_path(prob: Problem, penalty: Penalty, lambdas=None, *,
                   f"iters={int(res_iters)} viols={total_viols}")
         k += 1
 
-    return PathResult(lambdas, betas, intercepts, metrics, t_screen, t_solve,
-                      buckets=tuple(sorted(engine.widths)))
+    result = PathResult(lambdas, betas, intercepts, metrics, t_screen,
+                        t_solve, buckets=tuple(sorted(engine.widths)))
+    # surface accepted-but-unconverged points: a solve that exits at
+    # max_iters is indistinguishable from convergence in the coefficients
+    # alone — the mask is in diagnostics, the warning makes it loud
+    n_unc = int((~result.diagnostics.converged).sum())
+    if n_unc:
+        warnings.warn(
+            f"{n_unc}/{len(result.diagnostics)} accepted path points "
+            f"exited at max_iters={cfg.max_iters} without meeting "
+            f"tol={cfg.tol:g} (see PathDiagnostics.converged / summary())",
+            UnconvergedPointsWarning, stacklevel=2)
+    return result

@@ -35,6 +35,13 @@ class SolveResult(NamedTuple):
     iters: jnp.ndarray
     converged: jnp.ndarray
     step: jnp.ndarray          # final step size (warm-startable)
+    # False: the iterate went non-finite (the solve DIVERGED, as opposed to
+    # merely exiting at max_iters).  A NaN delta exits the while_loop on the
+    # next cond evaluation (IEEE: NaN > tol is False) with converged=False;
+    # this flag lets callers tell the two apart and hand back instead of
+    # committing a garbage point.  Defaulted so the pinned seed solver's
+    # 5-field construction (path_reference) keeps working.
+    finite: jnp.ndarray = True
 
 
 def _intercept_from_eta(prob: Problem, eta, c):
@@ -143,7 +150,9 @@ def fista(prob: Problem, penalty: Penalty, lam, beta0, c0=0.0, step0=1.0,
            jnp.asarray(c0, beta0.dtype), jnp.asarray(step0, beta0.dtype),
            jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
     s = jax.lax.while_loop(cond, body, s0)
-    return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step)
+    finite = (jnp.all(jnp.isfinite(s.beta)) & jnp.isfinite(s.c)
+              & ~jnp.isnan(s.delta))
+    return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step, finite)
 
 
 @partial(jax.jit, static_argnames=("max_iters", "max_bt"))
@@ -200,7 +209,9 @@ def atos(prob: Problem, penalty: Penalty, lam, beta0, c0=0.0, step0=1.0,
     s0 = S(beta0, beta0, jnp.asarray(c0, beta0.dtype),
            jnp.asarray(step0, beta0.dtype), jnp.array(0), jnp.array(jnp.inf, beta0.dtype))
     s = jax.lax.while_loop(cond, body, s0)
-    return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step)
+    finite = (jnp.all(jnp.isfinite(s.beta)) & jnp.isfinite(s.c)
+              & ~jnp.isnan(s.delta))
+    return SolveResult(s.beta, s.c, s.it, s.delta <= tol, s.step, finite)
 
 
 SOLVERS = {"fista": fista, "atos": atos}

@@ -1,0 +1,174 @@
+"""Structured input validation shared by the estimator front doors
+(``SGL.fit``/``BatchedSGL.fit``), the batch scheduler's
+:class:`~repro.batch.scheduler.FitRequest`, and the serving admission
+layer (:mod:`repro.serving.admission`).
+
+Two surfaces over the same checks:
+
+* :func:`input_issues` — non-raising; returns ``[(code, detail), ...]``
+  with a structured reason code per problem found.  The admission layer
+  turns these into dead-letter records instead of exceptions, so one
+  malformed request never crashes a fleet drain.
+* :func:`validate_inputs` — raising; the estimator front doors call this
+  so a non-finite ``y`` or a mismatched group layout fails with a clear
+  ``ValueError`` at ``fit()`` time instead of a NaN path or a shape error
+  deep inside jit.
+
+The non-finite scan over ``X`` is O(n*p); a tiny identity-keyed cache
+amortizes it across the B requests of a shared-design fleet (arrays are
+treated as immutable once validated — the standard JAX discipline; code
+that *simulates* corruption, e.g. :mod:`repro.testing.faults`, must
+replace the array object rather than mutate it in place).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# structured reason codes — the admission layer's dead-letter vocabulary
+# ---------------------------------------------------------------------------
+
+BAD_SHAPE = "bad_shape"
+SHAPE_MISMATCH = "shape_mismatch"
+GROUP_MISMATCH = "group_mismatch"
+NON_FINITE_X = "non_finite_X"
+NON_FINITE_Y = "non_finite_y"
+DEGENERATE_DESIGN = "degenerate_design"
+BAD_LAMBDA_GRID = "bad_lambda_grid"
+BAD_LOSS = "bad_loss"
+
+VALID_LOSSES = ("linear", "logistic")
+
+
+class PathDivergedError(RuntimeError):
+    """The solver carry went non-finite at an accepted path point.
+
+    Raised by the sequential/windowed host drivers instead of committing a
+    garbage tail (the device driver hands back to the host first, so a
+    transient device-side divergence gets one clean retry before this is
+    raised).  ``partial`` holds the :class:`~repro.core.path.PathResult`
+    prefix solved before the divergence, ``point`` the failing path index.
+    """
+
+    def __init__(self, point: int, partial=None, detail: str = ""):
+        self.point = int(point)
+        self.partial = partial
+        msg = f"solver diverged (non-finite coefficients) at path point {point}"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+class UnconvergedPointsWarning(UserWarning):
+    """Accepted path points whose inner solve exited at ``max_iters``
+    without meeting ``tol`` (``PathDiagnostics.converged`` mask)."""
+
+
+class LaneDivergedWarning(UserWarning):
+    """A fleet lane's solve diverged (non-finite path values).  Sibling
+    lanes are numerically independent and unaffected; the diverged lane's
+    result carries NaN so downstream consumers can quarantine it."""
+
+
+# ---------------------------------------------------------------------------
+# finiteness with a bounded identity cache
+# ---------------------------------------------------------------------------
+
+_FINITE_CACHE: list = []        # [(array_object, ok)] — compared by identity
+_FINITE_CACHE_MAX = 8
+
+
+def finite_ok(arr) -> bool:
+    """True iff every element of ``arr`` is finite; identity-cached so the
+    B lanes of a shared-design fleet pay for one scan, not B."""
+    for obj, ok in _FINITE_CACHE:
+        if obj is arr:
+            return ok
+    ok = bool(np.isfinite(np.asarray(arr)).all())
+    _FINITE_CACHE.append((arr, ok))
+    if len(_FINITE_CACHE) > _FINITE_CACHE_MAX:
+        del _FINITE_CACHE[0]
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# the checks
+# ---------------------------------------------------------------------------
+
+def input_issues(X, y, groups=None, lambdas=None,
+                 loss: str = "linear") -> list:
+    """Validate fit inputs -> ``[(code, detail), ...]`` (empty = clean).
+
+    Checks, in order: loss name, array ranks, row-count agreement,
+    group-layout coverage of ``p``, finiteness of X and y, degenerate
+    designs (empty / all-zero X, constant y — both make the lambda grid
+    collapse to zero), and a user lambda grid that is non-finite,
+    negative, or not strictly decreasing.
+    """
+    issues = []
+    if loss not in VALID_LOSSES:
+        issues.append((BAD_LOSS, f"loss must be one of {VALID_LOSSES}, "
+                                 f"got {loss!r}"))
+    xsh = getattr(X, "shape", None)
+    ysh = getattr(y, "shape", None)
+    if xsh is None or len(xsh) != 2:
+        issues.append((BAD_SHAPE, f"X must be a 2-D array, got shape {xsh}"))
+        return issues                      # nothing downstream is meaningful
+    if ysh is None or len(ysh) != 1:
+        issues.append((BAD_SHAPE, f"y must be a 1-D array, got shape {ysh}"))
+        return issues
+    n, p = int(xsh[0]), int(xsh[1])
+    if int(ysh[0]) != n:
+        issues.append((SHAPE_MISMATCH,
+                       f"len(y)={int(ysh[0])} does not match X rows n={n}"))
+    if groups is not None and int(groups.p) != p:
+        issues.append((GROUP_MISMATCH,
+                       f"group layout covers p={int(groups.p)} variables "
+                       f"but X has p={p} columns"))
+    if n == 0 or p == 0:
+        issues.append((DEGENERATE_DESIGN, f"empty design: X is {n} x {p}"))
+        return issues
+    x_finite = finite_ok(X)
+    if not x_finite:
+        issues.append((NON_FINITE_X, "X contains NaN or Inf entries"))
+    y_finite = finite_ok(y)
+    if not y_finite:
+        issues.append((NON_FINITE_Y, "y contains NaN or Inf entries"))
+    # degenerate designs make the AUTO lambda grid collapse (lambda_max = 0
+    # -> a constant all-zero grid); with an explicit user grid the null-path
+    # fit is well-defined, so these are only flagged when lambdas is None
+    if lambdas is None:
+        if x_finite and not np.any(np.asarray(X)):
+            issues.append((DEGENERATE_DESIGN,
+                           "X is identically zero: lambda_max = 0, the "
+                           "auto lambda grid collapses"))
+        if y_finite and int(ysh[0]) == n and n > 0:
+            y_np = np.asarray(y)
+            if np.ptp(y_np) == 0:
+                issues.append((DEGENERATE_DESIGN,
+                               f"y is constant ({float(y_np.flat[0]):g}): "
+                               "the null model is exact and the auto "
+                               "lambda grid collapses"))
+    if lambdas is not None:
+        lam = np.asarray(lambdas, dtype=np.float64)
+        if lam.ndim != 1 or lam.size == 0:
+            issues.append((BAD_LAMBDA_GRID,
+                           f"lambdas must be a non-empty 1-D grid, got "
+                           f"shape {lam.shape}"))
+        elif not np.isfinite(lam).all():
+            issues.append((BAD_LAMBDA_GRID, "lambdas contain NaN or Inf"))
+        elif (lam < 0).any():
+            issues.append((BAD_LAMBDA_GRID, "lambdas must be non-negative"))
+        elif lam.size > 1 and (np.diff(lam) >= 0).any():
+            issues.append((BAD_LAMBDA_GRID,
+                           "lambdas must be strictly decreasing"))
+    return issues
+
+
+def validate_inputs(X, y, groups=None, lambdas=None, loss: str = "linear",
+                    where: str = "fit") -> None:
+    """Raise ``ValueError`` listing every issue :func:`input_issues` finds."""
+    issues = input_issues(X, y, groups=groups, lambdas=lambdas, loss=loss)
+    if issues:
+        lines = "; ".join(f"[{code}] {detail}" for code, detail in issues)
+        raise ValueError(f"invalid inputs to {where}: {lines}")

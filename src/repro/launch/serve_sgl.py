@@ -141,16 +141,34 @@ def fit_on_demand(reqs, config=None, save_to: Optional[str] = None) -> dict:
     vmapped fit) and report fit throughput.  ``save_to`` additionally
     serializes a homogeneous shared-design queue as one BatchedSGL ``.npz``
     built from the already-fitted paths (no refit); heterogeneous queues
-    are fitted and served without a fleet save."""
+    are fitted and served without a fleet save.
+
+    Queue entries may be duck-typed payloads (mappings / attribute bags)
+    rather than validated ``FitRequest`` s: everything runs through the
+    admission layer first, and malformed entries are quarantined into
+    ``stats["dead_letters"]`` instead of crashing the drain (a 1-bad-in-16
+    queue still fits the 15 good problems)."""
     from ..batch import build_fleets, fit_fleet
     from ..core.config import FitConfig
+    from ..serving.admission import admit
     cfg = config if config is not None else FitConfig(length=20, term=0.1)
+    admission = admit(list(reqs))
+    for dl in admission.dead:
+        print(f"[serve_sgl] quarantined malformed request: {dl}")
+    reqs = [r for _, r in admission.admitted]
+    if not reqs:
+        return {"problems": 0, "rejected": len(admission.dead),
+                "dead_letters": [str(dl) for dl in admission.dead],
+                "fleets": 0, "fleet_sizes": [], "wall_s": 0.0,
+                "problems_per_s": 0.0, "path_points": 0}
     buckets = build_fleets(reqs, cfg)       # scheduled ONCE, reused below
     t0 = time.perf_counter()
     results = fit_fleet(reqs, cfg, buckets=buckets)
     dt = time.perf_counter() - t0
     stats = {
         "problems": len(reqs),
+        "rejected": len(admission.dead),
+        "dead_letters": [str(dl) for dl in admission.dead],
         "fleets": len(buckets),
         "fleet_sizes": [len(b.indices) for b in buckets],
         "wall_s": dt,

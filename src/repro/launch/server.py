@@ -1,0 +1,418 @@
+"""Fault-tolerant serving loop: admission, quarantine, and a driver
+degradation ladder over the fleet scheduler.
+
+``serve_sgl --fit-demand`` drains a queue through ``fit_fleet`` and dies
+on the first malformed request, diverged solve, or wedged dispatch.
+:class:`SGLServer` is the production-shaped version of that loop, built
+from three layers:
+
+* **Admission** (:mod:`repro.serving.admission`) — every payload is
+  validated before scheduling; malformed ones become dead-letter
+  :class:`RequestOutcome` s (``status="rejected"``) with structured
+  reason codes.  A bad request never costs a fleet dispatch.
+* **Degradation ladder** — each request starts at the fastest driver and
+  falls one rung per failure::
+
+      device  ->  host_windowed  ->  sequential  ->  reference
+
+  The first two rungs run vmapped fleets (``driver="device"`` /
+  windowed host); ``sequential`` drops to the per-problem core engine
+  (window=1), and ``reference`` is the pinned seed driver
+  (:func:`repro.core.path_reference.fit_path_reference`) — slowest, most
+  battle-tested, zero shared machinery with the fused paths.  Rungs a
+  config cannot run (e.g. ``solver="atos"`` on the batched engine) are
+  skipped, not failed.
+* **Retry-and-bisect** — failures come in two scopes.  *Fleet-scope*
+  faults (a dispatch exception or a blown deadline) cannot be attributed
+  to a lane, so the dispatch is split in half and each half re-fitted,
+  recursively, until the culprit is isolated (``max_bisect_depth`` bounds
+  the recursion; a singleton that still fails descends the ladder).
+  *Lane-scope* faults (a request whose returned path is non-finite) are
+  directly attributable, so only the culprit descends — its 15 healthy
+  fleet siblings are served from the *same* dispatch, no refit.  A
+  request that fails on the bottom rung is quarantined
+  (``status="quarantined"``) with its full attempt history.
+
+Deadlines are enforced *post hoc*: a jitted dispatch cannot be preempted
+mid-flight, so the server measures wall time per dispatch and treats an
+overrun as a fleet-scope fault (the fit already happened; the point is to
+stop the slow request from riding along on the next drain).  Divergence
+*inside* the solvers is handled one layer down (non-finite-carry guards
+in ``core/engine.py`` / ``batch/engine.py`` — see
+``LaneDivergedWarning`` / ``PathDivergedError``); the server is the
+recovery policy on top.
+
+Every hook of :class:`repro.testing.faults.FaultInjector` threads through
+here, so the chaos suite (``tests/test_chaos.py``) and
+``benchmarks/bench_serve.py`` can force each failure mode
+deterministically.
+
+    PYTHONPATH=src python -m repro.launch.server --requests 16 \
+        --fault-rate 0.25 --seed 0
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+import warnings
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..batch.scheduler import FitRequest, fit_fleet
+from ..core.adaptive import pca_weights
+from ..core.config import FitConfig
+from ..core.losses import Problem
+from ..core.path import fit_path
+from ..core.path_reference import fit_path_reference
+from ..core.penalties import Penalty
+from ..core.validation import (LaneDivergedWarning, PathDivergedError,
+                               UnconvergedPointsWarning)
+from ..serving.admission import DeadLetter, admit
+
+LADDER = ("device", "host_windowed", "sequential", "reference")
+_FLEET_LEVELS = ("device", "host_windowed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Serving-loop policy knobs (the fit itself is a ``FitConfig``)."""
+
+    fit: Optional[FitConfig] = None   # None -> FitConfig(length=20, term=0.1)
+    deadline_s: float = 120.0         # per-dispatch wall-time budget
+    max_bisect_depth: int = 5         # fleet-split recursion bound
+    ladder: tuple = LADDER
+
+    def __post_init__(self):
+        if self.deadline_s <= 0:
+            raise ValueError("deadline_s must be positive")
+        if self.max_bisect_depth < 0:
+            raise ValueError("max_bisect_depth must be >= 0")
+        bad = [lv for lv in self.ladder if lv not in LADDER]
+        if bad or not self.ladder:
+            raise ValueError(f"ladder must be a non-empty subset of "
+                             f"{LADDER}, got {self.ladder}")
+
+
+@dataclasses.dataclass
+class Attempt:
+    """One dispatch's outcome for one request."""
+
+    level: str
+    outcome: str          # ok | non_finite | error | deadline | skipped
+    wall_s: float = 0.0
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class RequestOutcome:
+    """Structured per-request record: what happened, where, how long."""
+
+    req_id: str
+    status: str                       # served | rejected | quarantined
+    level: Optional[str] = None       # ladder level that served it
+    result: object = None             # PathResult when served
+    reasons: list = dataclasses.field(default_factory=list)
+    attempts: list = dataclasses.field(default_factory=list)
+    latency_s: float = 0.0
+
+    def to_record(self) -> dict:
+        """JSON-safe summary (results elided)."""
+        return {"req_id": self.req_id, "status": self.status,
+                "level": self.level, "latency_s": self.latency_s,
+                "reasons": [list(r) for r in self.reasons],
+                "attempts": [dataclasses.asdict(a) for a in self.attempts]}
+
+
+def _result_finite(result) -> bool:
+    return bool(np.isfinite(np.asarray(result.betas)).all()
+                and np.isfinite(np.asarray(result.intercepts)).all())
+
+
+class SGLServer:
+    """Admission -> laddered fleet dispatch -> structured outcomes.
+
+    ``process(payloads)`` drains one batch and returns a
+    :class:`RequestOutcome` per payload, in order; cumulative counters
+    live in :attr:`stats` and :meth:`summary` derives latency/throughput
+    percentiles from them.
+    """
+
+    def __init__(self, config: Optional[ServerConfig] = None,
+                 injector=None):
+        self.config = config if config is not None else ServerConfig()
+        self.fit_config = (self.config.fit if self.config.fit is not None
+                           else FitConfig(length=20, term=0.1))
+        self.injector = injector
+        self.stats = {"submitted": 0, "served": 0, "rejected": 0,
+                      "quarantined": 0, "dispatches": 0,
+                      "bisect_dispatches": 0, "wall_s": 0.0,
+                      "served_by_level": {lv: 0 for lv in LADDER}}
+        self._latencies: list = []
+        self.dead_letters: list = []
+
+    # -- ladder plumbing ----------------------------------------------------
+
+    def _level_config(self, level: str) -> FitConfig:
+        cfg = self.fit_config
+        if level == "device":
+            return cfg.replace(driver="device")
+        if level == "host_windowed":
+            return cfg.replace(driver="host",
+                               window=cfg.window if cfg.window > 1 else 4)
+        # sequential: per-problem core engine, one point per dispatch step
+        return cfg.replace(driver="host", window=1)
+
+    def _ladder_for(self, req: FitRequest) -> list:
+        """Drop rungs this (config, request) pair cannot run: the batched
+        engine is fista/jnp-only and the device driver excludes
+        gap_dynamic — an unusable rung is a skip, not a failure."""
+        cfg = self.fit_config
+        fleet_ok = (cfg.solver == "fista" and cfg.backend == "jnp"
+                    and cfg.screen != "gap_dynamic")
+        out = []
+        for lv in self.config.ladder:
+            if lv in _FLEET_LEVELS and not fleet_ok:
+                continue
+            if lv == "device" and cfg.screen == "gap_dynamic":
+                continue
+            out.append(lv)
+        return out or ["reference"]
+
+    # -- dispatch wrappers --------------------------------------------------
+
+    def _measure(self, req_ids: Sequence[str], level: str, fn):
+        """Run ``fn`` under the injector's dispatch hooks; returns
+        ``(results | None, outcome, wall_s, detail)`` where outcome is
+        fleet-scope: ok | error | deadline."""
+        self.stats["dispatches"] += 1
+        t0 = time.perf_counter()
+        try:
+            if self.injector is not None:
+                self.injector.dispatch_error(req_ids, level)
+            with warnings.catch_warnings():
+                # divergence/convergence warnings are handled structurally
+                # here (lane isolation + outcome records), not as text
+                warnings.simplefilter("ignore", LaneDivergedWarning)
+                warnings.simplefilter("ignore", UnconvergedPointsWarning)
+                results = fn()
+        except PathDivergedError as e:
+            wall = time.perf_counter() - t0
+            return None, "non_finite", wall, str(e)
+        except Exception as e:
+            wall = time.perf_counter() - t0
+            return None, "error", wall, f"{type(e).__name__}: {e}"
+        wall = time.perf_counter() - t0
+        if self.injector is not None:
+            wall += self.injector.extra_seconds(req_ids, level)
+        if wall > self.config.deadline_s:
+            return None, "deadline", wall, (
+                f"dispatch took {wall:.3f}s > deadline "
+                f"{self.config.deadline_s:.3f}s")
+        return results, "ok", wall, ""
+
+    def _run_fleet_level(self, batch: list, level: str, depth: int = 0
+                         ) -> tuple:
+        """Dispatch ``batch`` = [(req_id, FitRequest, RequestOutcome)] as
+        one fleet at ``level``; returns (served, demoted).  Fleet-scope
+        faults bisect; lane-scope (non-finite) faults demote only the
+        culprit while siblings are served from this same dispatch."""
+        ids = [rid for rid, _, _ in batch]
+        cfg = self._level_config(level)
+        if depth > 0:
+            self.stats["bisect_dispatches"] += 1
+        results, outcome, wall, detail = self._measure(
+            ids, level, lambda: fit_fleet([r for _, r, _ in batch], cfg))
+        if outcome == "ok":
+            served, demoted = [], []
+            for (rid, req, oc), res in zip(batch, results):
+                if self.injector is not None:
+                    res = self.injector.poison_result(rid, level, res)
+                if _result_finite(res):
+                    oc.attempts.append(Attempt(level, "ok", wall))
+                    served.append((rid, req, oc, res))
+                else:
+                    oc.attempts.append(Attempt(
+                        level, "non_finite", wall,
+                        "returned path contains NaN/Inf; lane isolated, "
+                        "siblings served from this dispatch"))
+                    demoted.append((rid, req, oc))
+            return served, demoted
+        # fleet-scope fault: unattributable -> bisect while we can
+        if len(batch) > 1 and depth < self.config.max_bisect_depth:
+            for rid, req, oc in batch:
+                oc.attempts.append(Attempt(
+                    level, outcome, wall, f"fleet-scope fault, bisecting "
+                    f"{len(batch)} lanes: {detail}"))
+            mid = len(batch) // 2
+            s1, d1 = self._run_fleet_level(batch[:mid], level, depth + 1)
+            s2, d2 = self._run_fleet_level(batch[mid:], level, depth + 1)
+            return s1 + s2, d1 + d2
+        for rid, req, oc in batch:
+            oc.attempts.append(Attempt(level, outcome, wall, detail))
+        return [], list(batch)
+
+    def _run_single_level(self, batch: list, level: str) -> tuple:
+        """``sequential`` / ``reference`` rungs: per-request dispatches —
+        full isolation, no bisecting needed."""
+        cfg = self._level_config("sequential")
+        served, demoted = [], []
+        for rid, req, oc in batch:
+            prob, pen, lams = self._materialize(req, cfg)
+            if level == "reference":
+                fn = lambda: fit_path_reference(
+                    prob, pen, lams, screen=cfg.screen, solver=cfg.solver,
+                    length=cfg.length, term=cfg.term,
+                    max_iters=cfg.max_iters, tol=cfg.tol,
+                    kkt_max_rounds=cfg.kkt_max_rounds,
+                    eps_method="exact" if cfg.eps_method == "kernel"
+                    else cfg.eps_method)
+            else:
+                fn = lambda: fit_path(prob, pen, lams, config=cfg)
+            res, outcome, wall, detail = self._measure([rid], level, fn)
+            if outcome == "ok":
+                if self.injector is not None:
+                    res = self.injector.poison_result(rid, level, res)
+                if not _result_finite(res):
+                    outcome, detail = "non_finite", \
+                        "returned path contains NaN/Inf"
+            if outcome == "ok":
+                oc.attempts.append(Attempt(level, "ok", wall))
+                served.append((rid, req, oc, res))
+            else:
+                oc.attempts.append(Attempt(level, outcome, wall, detail))
+                demoted.append((rid, req, oc))
+        return served, demoted
+
+    def _materialize(self, req: FitRequest, cfg: FitConfig):
+        dtype = jnp.float64 if cfg.dtype == "float64" else jnp.float32
+        prob = Problem(jnp.asarray(req.X, dtype), jnp.asarray(req.y, dtype),
+                       req.loss, cfg.fit_intercept)
+        if req.weights is not None:
+            v, w = (jnp.asarray(a, dtype) for a in req.weights)
+        elif cfg.adaptive:
+            v, w = pca_weights(prob.X, req.groups, cfg.gamma1, cfg.gamma2)
+        else:
+            v = w = None
+        alpha = cfg.alpha if req.alpha is None else float(req.alpha)
+        pen = Penalty(req.groups, alpha, v, w)
+        return prob, pen, req.lambdas
+
+    # -- the loop -----------------------------------------------------------
+
+    def process(self, payloads: Sequence,
+                ids: Optional[Sequence[str]] = None) -> list:
+        """Drain one batch of payloads -> one :class:`RequestOutcome`
+        each, in payload order."""
+        t_start = time.perf_counter()
+        if ids is None:
+            base = self.stats["submitted"]
+            ids = [f"req-{base + i}" for i in range(len(payloads))]
+        ids = [str(i) for i in ids]
+        self.stats["submitted"] += len(payloads)
+        if self.injector is not None:
+            payloads = [self.injector.corrupt_payload(rid, p)
+                        for rid, p in zip(ids, payloads)]
+
+        outcomes = {}
+        admission = admit(payloads, ids)
+        for dl in admission.dead:
+            self.stats["rejected"] += 1
+            self.dead_letters.append(dl)
+            outcomes[dl.req_id] = RequestOutcome(
+                dl.req_id, "rejected", reasons=list(dl.reasons))
+
+        pending = [(rid, req, RequestOutcome(rid, "quarantined"))
+                   for rid, req in admission.admitted]
+        for rid, _, oc in pending:
+            outcomes[rid] = oc
+
+        # group by usable ladder (one request mix -> possibly two ladders)
+        if pending:
+            ladder = self._ladder_for(pending[0][1])
+            for level in ladder:
+                if not pending:
+                    break
+                if level in _FLEET_LEVELS:
+                    served, pending = self._run_fleet_level(pending, level)
+                else:
+                    served, pending = self._run_single_level(pending, level)
+                for rid, req, oc, res in served:
+                    oc.status, oc.level, oc.result = "served", level, res
+                    self.stats["served"] += 1
+                    self.stats["served_by_level"][level] += 1
+
+        for rid, req, oc in pending:       # exhausted the ladder
+            self.stats["quarantined"] += 1
+            oc.reasons.append(("exhausted_ladder",
+                               f"all {len(self._ladder_for(req))} ladder "
+                               f"level(s) failed; last: "
+                               f"{oc.attempts[-1].outcome if oc.attempts else 'n/a'}"))
+            self.dead_letters.append(DeadLetter(
+                rid, list(oc.reasons), stage="quarantine"))
+
+        wall = time.perf_counter() - t_start
+        self.stats["wall_s"] += wall
+        out = [outcomes[rid] for rid in ids]
+        for oc in out:
+            oc.latency_s = sum(a.wall_s for a in oc.attempts)
+            if oc.status == "rejected":
+                oc.latency_s = 0.0
+            self._latencies.append(oc.latency_s)
+        return out
+
+    def summary(self) -> dict:
+        """Cumulative JSON-safe stats: outcome counts, latency
+        percentiles, throughput, recovery overhead."""
+        lat = np.asarray([l for l in self._latencies if l > 0.0])
+        s = dict(self.stats)
+        s["served_by_level"] = dict(self.stats["served_by_level"])
+        s["latency_p50_s"] = float(np.percentile(lat, 50)) if lat.size else 0.0
+        s["latency_p99_s"] = float(np.percentile(lat, 99)) if lat.size else 0.0
+        s["requests_per_s"] = (self.stats["served"] / self.stats["wall_s"]
+                               if self.stats["wall_s"] > 0 else 0.0)
+        n_disp = self.stats["dispatches"]
+        s["recovery_dispatch_overhead"] = (
+            self.stats["bisect_dispatches"] / n_disp if n_disp else 0.0)
+        s["dead_letters"] = [str(dl) for dl in self.dead_letters]
+        return s
+
+
+# ---------------------------------------------------------------------------
+# CLI demo: a synthetic queue under an injected fault plan
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    from ..testing.faults import FaultInjector, FaultPlan
+    from .serve_sgl import demo_fit_queue
+    ap = argparse.ArgumentParser(
+        description="fault-tolerant SGL serving loop (demo)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--fault-rate", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=120.0)
+    args = ap.parse_args(argv)
+    reqs, _ = demo_fit_queue(args.requests, seed=args.seed)
+    ids = [f"req-{i}" for i in range(len(reqs))]
+    injector = None
+    if args.fault_rate > 0:
+        plan = FaultPlan.random(ids, args.fault_rate, seed=args.seed)
+        injector = FaultInjector(plan)
+        print(f"[server] injecting {len(plan.faults)} fault(s): "
+              f"{[(f.kind, f.req_id) for f in plan.faults]}")
+    server = SGLServer(ServerConfig(deadline_s=args.deadline),
+                       injector=injector)
+    outcomes = server.process(reqs, ids)
+    for oc in outcomes:
+        lvls = "->".join(a.level for a in oc.attempts) or "-"
+        print(f"[server] {oc.req_id}: {oc.status} ({lvls}, "
+              f"{oc.latency_s:.3f}s)")
+    print(json.dumps(server.summary(), indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

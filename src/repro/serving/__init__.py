@@ -1,0 +1,14 @@
+"""Serving-side robustness: request admission and dead-letter records.
+
+:mod:`repro.serving.admission` validates every incoming fit payload
+*before* it is scheduled into a vmapped fleet, turning malformed requests
+into structured :class:`~repro.serving.admission.DeadLetter` records
+instead of mid-fleet exceptions.  The fault-tolerant serving loop
+(:mod:`repro.launch.server`) builds on it; ``serve_sgl --fit-demand``
+uses it to quarantine malformed queue entries.
+"""
+from .admission import (BAD_REQUEST, AdmissionResult, DeadLetter, admit,
+                        check_payload, to_request)
+
+__all__ = ["BAD_REQUEST", "AdmissionResult", "DeadLetter", "admit",
+           "check_payload", "to_request"]

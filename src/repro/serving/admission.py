@@ -1,0 +1,154 @@
+"""Admission layer: validate fit payloads before they touch a fleet.
+
+A vmapped fleet step compiles one program for B lanes; a single malformed
+request discovered *inside* the dispatch costs its 15 siblings the whole
+fit.  Admission moves that discovery to the front door: every payload runs
+the structured :func:`repro.core.validation.input_issues` sweep (shapes,
+group coverage, finiteness, degenerate designs, lambda grids) plus a
+payload-integrity check (missing fields, unusable group spec), and the
+failures become :class:`DeadLetter` records with machine-readable reason
+codes instead of exceptions.
+
+Payloads are deliberately duck-typed — an already-constructed
+:class:`~repro.batch.scheduler.FitRequest`, a mapping with the FitRequest
+field names, or any object carrying them as attributes — because the
+serving loop's whole premise is that the client side cannot be trusted to
+have constructed a valid ``FitRequest`` (whose ``__post_init__`` raises).
+``finite_ok``'s identity cache keeps re-validation of shared-design
+fleets O(1) per extra lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..batch.scheduler import FitRequest
+from ..core.groups import GroupInfo
+from ..core.validation import input_issues
+
+# payload-integrity code, alongside the repro.core.validation vocabulary
+BAD_REQUEST = "bad_request"
+
+_REQUIRED = ("X", "y", "groups")
+_OPTIONAL = {"alpha": None, "lambdas": None, "loss": "linear",
+             "weights": None}
+
+
+@dataclasses.dataclass
+class DeadLetter:
+    """One rejected/quarantined request with structured reasons.
+
+    ``stage`` records where the request died: ``"admission"`` (never
+    dispatched) or ``"quarantine"`` (dispatched, isolated by the serving
+    loop after faults survived the whole degradation ladder).
+    """
+
+    req_id: str
+    reasons: list                    # [(code, detail), ...]
+    stage: str = "admission"
+
+    @property
+    def codes(self) -> tuple:
+        return tuple(code for code, _ in self.reasons)
+
+    def __str__(self) -> str:
+        why = "; ".join(f"[{c}] {d}" for c, d in self.reasons)
+        return f"DeadLetter({self.req_id}, {self.stage}): {why}"
+
+
+@dataclasses.dataclass
+class AdmissionResult:
+    """``admit()`` output: admitted ``(req_id, FitRequest)`` pairs in input
+    order, dead letters for everything else."""
+
+    admitted: list                   # [(req_id, FitRequest), ...]
+    dead: list                       # [DeadLetter, ...]
+
+    @property
+    def dead_ids(self) -> tuple:
+        return tuple(dl.req_id for dl in self.dead)
+
+
+def _get(payload, field, default=None):
+    if isinstance(payload, Mapping):
+        return payload.get(field, default)
+    return getattr(payload, field, default)
+
+
+def _extract(payload) -> tuple:
+    """(fields-dict, issues): pull FitRequest fields out of a duck-typed
+    payload; issues is non-empty when the payload itself is unusable."""
+    missing = [f for f in _REQUIRED if _get(payload, f) is None]
+    if missing:
+        return None, [(BAD_REQUEST,
+                       f"payload missing required field(s) {missing}")]
+    fields = {f: _get(payload, f) for f in _REQUIRED}
+    for f, dv in _OPTIONAL.items():
+        fields[f] = _get(payload, f, dv)
+    if fields["loss"] is None:
+        fields["loss"] = "linear"
+    g = fields["groups"]
+    if not isinstance(g, GroupInfo):
+        try:
+            fields["groups"] = GroupInfo.from_sizes(
+                np.asarray(g, np.int64))
+        except Exception as e:                  # garbage group spec
+            return None, [(BAD_REQUEST, f"unusable group layout: {e}")]
+    try:
+        fields["y"] = np.asarray(fields["y"])
+    except Exception as e:
+        return None, [(BAD_REQUEST, f"unusable y payload: {e}")]
+    return fields, []
+
+
+def check_payload(payload) -> list:
+    """Non-raising sweep -> ``[(code, detail), ...]``; empty = admissible."""
+    if isinstance(payload, FitRequest):
+        # construction already validated it; re-check is cheap (finite_ok
+        # identity cache) and catches post-construction array swaps
+        return input_issues(payload.X, np.asarray(payload.y),
+                            groups=payload.groups, lambdas=payload.lambdas,
+                            loss=payload.loss)
+    fields, issues = _extract(payload)
+    if issues:
+        return issues
+    return input_issues(fields["X"], fields["y"], groups=fields["groups"],
+                        lambdas=fields["lambdas"], loss=fields["loss"])
+
+
+def to_request(payload) -> FitRequest:
+    """Materialize an admissible payload as a FitRequest (validates again
+    at construction — by then the checks are cache hits)."""
+    if isinstance(payload, FitRequest):
+        return payload
+    fields, issues = _extract(payload)
+    if issues:
+        raise ValueError(str(issues))
+    return FitRequest(**fields)
+
+
+def admit(payloads: Sequence, ids: Optional[Sequence[str]] = None
+          ) -> AdmissionResult:
+    """Validate a batch of payloads -> :class:`AdmissionResult`.
+
+    Never raises on a bad payload: each failure becomes a
+    :class:`DeadLetter` carrying every issue found, so one malformed
+    request in a 16-lane queue costs exactly one lane.
+    """
+    if ids is None:
+        ids = [f"req-{i}" for i in range(len(payloads))]
+    if len(ids) != len(payloads):
+        raise ValueError(f"{len(ids)} ids for {len(payloads)} payloads")
+    admitted, dead = [], []
+    for req_id, payload in zip(ids, payloads):
+        issues = check_payload(payload)
+        if issues:
+            dead.append(DeadLetter(str(req_id), issues))
+            continue
+        try:
+            admitted.append((str(req_id), to_request(payload)))
+        except Exception as e:      # belt-and-braces: construction raced
+            dead.append(DeadLetter(str(req_id), [(BAD_REQUEST, str(e))]))
+    return AdmissionResult(admitted, dead)

@@ -1,0 +1,15 @@
+"""Test/chaos support: deterministic fault injection for the serving loop.
+
+:mod:`repro.testing.faults` provides the :class:`FaultPlan` /
+:class:`FaultInjector` pair the chaos suite and ``benchmarks/bench_serve``
+use to force NaN inputs, solver divergence, deadline expiry and simulated
+device-dispatch failure through :class:`repro.launch.server.SGLServer`
+without any real nondeterminism.
+"""
+from .faults import (FAULT_DEADLINE, FAULT_DISPATCH_ERROR, FAULT_KINDS,
+                     FAULT_NAN_INPUT, FAULT_SOLVER_DIVERGENCE, Fault,
+                     FaultInjector, FaultPlan, InjectedDispatchError)
+
+__all__ = ["FAULT_DEADLINE", "FAULT_DISPATCH_ERROR", "FAULT_KINDS",
+           "FAULT_NAN_INPUT", "FAULT_SOLVER_DIVERGENCE", "Fault",
+           "FaultInjector", "FaultPlan", "InjectedDispatchError"]

@@ -1,0 +1,188 @@
+"""Deterministic fault injection for the fault-tolerant serving loop.
+
+The chaos suite needs to *force* every failure mode the serving loop
+claims to survive — NaN inputs, solver divergence, deadline expiry,
+device-dispatch failure — reproducibly, with zero reliance on real
+hardware faults or wall-clock races.  A :class:`FaultPlan` is a static
+list of :class:`Fault` records (which request, which failure kind, at
+which degradation-ladder level it fires); a :class:`FaultInjector` is the
+plan's runtime: the server calls its hooks at well-defined seams and the
+injector decides, deterministically, what breaks.
+
+Injection seams (all no-ops without a matching fault):
+
+* :meth:`FaultInjector.corrupt_payload` — pre-admission: returns a
+  payload whose ``y`` is a NaN-poisoned **copy** (the original array is
+  never mutated in place — ``finite_ok``'s identity cache treats
+  validated arrays as immutable, so corruption must replace the object,
+  exactly like a hostile client sending fresh garbage would).
+* :meth:`FaultInjector.dispatch_error` — raises
+  :class:`InjectedDispatchError` before the fleet dispatch runs,
+  simulating a device/driver failure at that ladder level.
+* :meth:`FaultInjector.poison_result` — post-fit: replaces a request's
+  result with an all-NaN copy, simulating solver divergence that escaped
+  the in-path guards.
+* :meth:`FaultInjector.extra_seconds` — deterministic seconds *added to
+  the measured wall time* of a dispatch (no real sleeping), simulating a
+  deadline blow-through.
+
+``level=None`` on a fault makes it **sticky**: it fires at every ladder
+level, so the request exhausts the ladder and must be quarantined.  A
+level-scoped fault fires only there, so the degradation ladder recovers
+the request one rung down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..core.path import PathResult
+
+FAULT_NAN_INPUT = "nan_input"
+FAULT_SOLVER_DIVERGENCE = "solver_divergence"
+FAULT_DISPATCH_ERROR = "dispatch_error"
+FAULT_DEADLINE = "deadline"
+FAULT_KINDS = (FAULT_NAN_INPUT, FAULT_SOLVER_DIVERGENCE,
+               FAULT_DISPATCH_ERROR, FAULT_DEADLINE)
+
+
+class InjectedDispatchError(RuntimeError):
+    """Simulated device/driver dispatch failure (fault-injection only)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One planned failure: ``kind`` hits ``req_id`` at ladder ``level``
+    (``None`` = sticky, fires at every level).  ``extra_s`` is the
+    simulated overrun for ``deadline`` faults."""
+
+    kind: str
+    req_id: str
+    level: Optional[str] = None
+    extra_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(choose from {FAULT_KINDS})")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A static, fully deterministic set of faults."""
+
+    faults: tuple = ()
+
+    @classmethod
+    def random(cls, req_ids: Sequence[str], rate: float, seed: int = 0,
+               kinds: Sequence[str] = (FAULT_SOLVER_DIVERGENCE,
+                                       FAULT_DISPATCH_ERROR,
+                                       FAULT_DEADLINE),
+               level: Optional[str] = "device",
+               extra_s: float = 1e9) -> "FaultPlan":
+        """Bernoulli(rate) per request with a seeded generator — the
+        benchmark's "5% injected-fault" plan.  Faults are level-scoped by
+        default so the ladder can recover every hit request."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for rid in req_ids:
+            if rng.uniform() < rate:
+                kind = kinds[int(rng.integers(len(kinds)))]
+                faults.append(Fault(kind, str(rid), level=level,
+                                    extra_s=extra_s
+                                    if kind == FAULT_DEADLINE else 0.0))
+        return cls(tuple(faults))
+
+    def matching(self, kind: str, req_id: str,
+                 level: Optional[str] = None) -> list:
+        """Faults of ``kind`` for ``req_id`` active at ``level`` (sticky
+        faults match every level; pre-admission hooks pass level=None and
+        match everything)."""
+        return [f for f in self.faults
+                if f.kind == kind and f.req_id == str(req_id)
+                and (f.level is None or level is None or f.level == level)]
+
+
+def _get(payload, field, default=None):
+    if isinstance(payload, Mapping):
+        return payload.get(field, default)
+    return getattr(payload, field, default)
+
+
+def _nan_like(arr):
+    out = np.array(np.asarray(arr), dtype=float, copy=True)
+    out.fill(np.nan)
+    return out
+
+
+class FaultInjector:
+    """Runtime for a :class:`FaultPlan`; records every firing in
+    ``fired`` as ``(kind, req_id, level)`` for the chaos suite to assert
+    against."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.fired: list = []
+
+    def _fire(self, fault: Fault, level):
+        self.fired.append((fault.kind, fault.req_id, level))
+
+    # -- pre-admission -----------------------------------------------------
+    def corrupt_payload(self, req_id: str, payload):
+        """NaN-poison a request's ``y`` (fresh copy; admission must catch
+        it).  Returns the payload unchanged when no fault matches."""
+        hits = self.plan.matching(FAULT_NAN_INPUT, req_id)
+        if not hits:
+            return payload
+        self._fire(hits[0], "admission")
+        y = np.array(np.asarray(_get(payload, "y")), dtype=float, copy=True)
+        if y.size:
+            y.flat[0] = np.nan
+        fields = {f: _get(payload, f) for f in
+                  ("X", "groups", "alpha", "lambdas", "loss", "weights")}
+        if fields["loss"] is None:
+            fields["loss"] = "linear"
+        fields["y"] = y
+        return fields
+
+    # -- dispatch-scope ----------------------------------------------------
+    def dispatch_error(self, req_ids: Sequence[str], level: str) -> None:
+        """Raise :class:`InjectedDispatchError` if any request in this
+        dispatch has a dispatch_error fault at this level."""
+        for rid in req_ids:
+            hits = self.plan.matching(FAULT_DISPATCH_ERROR, rid, level)
+            if hits:
+                self._fire(hits[0], level)
+                raise InjectedDispatchError(
+                    f"injected dispatch failure at level {level!r} "
+                    f"(request {rid})")
+
+    def extra_seconds(self, req_ids: Sequence[str], level: str) -> float:
+        """Simulated wall-time overrun for this dispatch (summed over the
+        deadline faults it contains); added to the measured elapsed, never
+        actually slept."""
+        total = 0.0
+        for rid in req_ids:
+            for f in self.plan.matching(FAULT_DEADLINE, rid, level):
+                self._fire(f, level)
+                total += f.extra_s
+        return total
+
+    # -- per-result --------------------------------------------------------
+    def poison_result(self, req_id: str, level: str,
+                      result: PathResult) -> PathResult:
+        """Replace a request's fitted path with an all-NaN copy
+        (simulated solver divergence the in-path guards missed)."""
+        hits = self.plan.matching(FAULT_SOLVER_DIVERGENCE, req_id, level)
+        if not hits:
+            return result
+        self._fire(hits[0], level)
+        diag = dataclasses.replace(
+            result.diagnostics,
+            converged=np.zeros(len(result.diagnostics), bool))
+        return PathResult(result.lambdas, _nan_like(result.betas),
+                          _nan_like(result.intercepts), diag,
+                          result.screen_time, result.solve_time,
+                          buckets=result.buckets)

@@ -1,0 +1,167 @@
+"""Chaos suite: deterministic fault injection through the full serving
+loop — quarantine isolation, the driver degradation ladder end-to-end,
+and deadline-driven retry-and-bisect (tier 2: fleet-scale jit compiles)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from jax.experimental import enable_x64
+
+from repro.core import GroupInfo
+from repro.core.config import FitConfig
+from repro.batch import FitRequest, fit_fleet
+from repro.testing.faults import (FAULT_DEADLINE, FAULT_DISPATCH_ERROR,
+                                  FAULT_SOLVER_DIVERGENCE, Fault,
+                                  FaultInjector, FaultPlan)
+from repro.launch.server import SGLServer, ServerConfig
+
+pytestmark = pytest.mark.tier2
+
+
+def shared_queue(B=16, n=48, m=8, gs=6, seed=0, dtype=np.float64):
+    """B shared-design requests (the eQTL fleet shape)."""
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([gs] * m)
+    X = rng.normal(size=(n, g.p)).astype(dtype)
+    reqs = []
+    for b in range(B):
+        beta = np.zeros(g.p)
+        for gi in rng.choice(m, 2, replace=False):
+            beta[gi * gs:gi * gs + 3] = rng.normal(0, 2, 3)
+        y = (X @ beta + 0.3 * rng.normal(size=n)).astype(dtype)
+        reqs.append(FitRequest(X, y, g, alpha=float(rng.uniform(0.7, 0.95))))
+    return reqs
+
+
+def betas_by_id(outcomes):
+    return {oc.req_id: np.asarray(oc.result.betas) for oc in outcomes
+            if oc.status == "served"}
+
+
+def test_poisoned_lane_quarantined_siblings_bitclean_x64():
+    """One sticky-diverged lane in a 16-lane fleet is quarantined; the 15
+    healthy siblings are served from the same dispatch and match a
+    clean-fleet run to <1e-10 in float64."""
+    with enable_x64():
+        cfg = FitConfig(length=6, term=0.2, dtype="float64")
+        sc = ServerConfig(fit=cfg, ladder=("host_windowed", "sequential",
+                                           "reference"))
+        reqs = shared_queue(B=16)
+        ids = [f"req-{i}" for i in range(16)]
+
+        clean = SGLServer(sc).process(reqs, ids)
+        assert all(oc.status == "served" for oc in clean)
+
+        # level=None -> the divergence follows req-7 down every rung
+        inj = FaultInjector(FaultPlan(
+            (Fault(FAULT_SOLVER_DIVERGENCE, "req-7", level=None),)))
+        out = SGLServer(sc, injector=inj).process(reqs, ids)
+
+    poisoned = [oc for oc in out if oc.req_id == "req-7"]
+    assert poisoned[0].status == "quarantined"
+    assert [a.level for a in poisoned[0].attempts] == [
+        "host_windowed", "sequential", "reference"]
+    assert poisoned[0].reasons[0][0] == "exhausted_ladder"
+
+    ref = betas_by_id(clean)
+    got = betas_by_id(out)
+    assert set(got) == set(ref) - {"req-7"}
+    for rid in got:                       # 15 siblings: identical results
+        assert np.max(np.abs(got[rid] - ref[rid])) < 1e-10
+    # siblings were served from the ORIGINAL dispatch: isolation did not
+    # cost them a refit (1 fleet dispatch + 2 single-request demotions)
+    served_fw = [oc for oc in out if oc.level == "host_windowed"]
+    assert len(served_fw) == 15
+    assert all(len(oc.attempts) == 1 for oc in served_fw)
+
+
+def test_device_dispatch_fault_degrades_to_host_clean_path():
+    """An injected device-driver failure sends the culprit one rung down;
+    the host-served path matches a direct host fleet fit to <1e-10."""
+    with enable_x64():
+        cfg = FitConfig(length=5, term=0.25, dtype="float64",
+                        window_width_cap=32)
+        sc = ServerConfig(fit=cfg, ladder=("device", "host_windowed"),
+                          max_bisect_depth=4)
+        reqs = shared_queue(B=4, n=40, m=6, gs=4, seed=3)
+        ids = [f"req-{i}" for i in range(4)]
+        inj = FaultInjector(FaultPlan(
+            (Fault(FAULT_DISPATCH_ERROR, "req-1", level="device"),)))
+        out = SGLServer(sc, injector=inj).process(reqs, ids)
+
+        assert all(oc.status == "served" for oc in out)
+        hit = out[1]
+        assert hit.level == "host_windowed"
+        assert any(a.outcome == "error" and a.level == "device"
+                   for a in hit.attempts)
+        # healthy siblings recovered on the device rung via bisect
+        assert all(oc.level == "device" for oc in out if oc is not hit)
+
+        direct = fit_fleet(reqs, cfg.replace(driver="host", window=4))
+    assert np.max(np.abs(np.asarray(hit.result.betas)
+                         - np.asarray(direct[1].betas))) < 1e-10
+    assert hit.result.diagnostics.converged.all()
+    assert np.isfinite(np.asarray(hit.result.betas)).all()
+
+
+def test_full_ladder_end_to_end_with_structured_records():
+    """Faults at device, host_windowed and sequential force one request
+    all the way to the reference driver; every hop is recorded."""
+    cfg = FitConfig(length=4, term=0.3, window_width_cap=32)
+    sc = ServerConfig(fit=cfg, max_bisect_depth=2)
+    reqs = shared_queue(B=2, n=32, m=4, gs=4, seed=5, dtype=np.float32)
+    ids = ["req-0", "req-1"]
+    inj = FaultInjector(FaultPlan((
+        Fault(FAULT_DISPATCH_ERROR, "req-0", level="device"),
+        Fault(FAULT_DISPATCH_ERROR, "req-0", level="host_windowed"),
+        Fault(FAULT_SOLVER_DIVERGENCE, "req-0", level="sequential"),
+    )))
+    server = SGLServer(sc, injector=inj)
+    out = server.process(reqs, ids)
+
+    assert out[0].status == "served"
+    assert out[0].level == "reference"
+    # bisect retries repeat a rung (fleet fail -> singleton retry), so
+    # compare the ordered unique rungs the request actually descended
+    levels = [a.level for a in out[0].attempts]
+    assert list(dict.fromkeys(levels)) == [
+        "device", "host_windowed", "sequential", "reference"]
+    assert [a.outcome for a in out[0].attempts][-3:] == [
+        "error", "non_finite", "ok"]
+    assert all(a.outcome == "error" for a in out[0].attempts
+               if a.level in ("device", "host_windowed"))
+    assert np.isfinite(np.asarray(out[0].result.betas)).all()
+    assert out[1].status == "served"
+    rec = out[0].to_record()
+    assert rec["level"] == "reference" and len(rec["attempts"]) == len(levels)
+    s = server.summary()
+    assert s["served_by_level"]["reference"] == 1
+    assert s["served"] == 2 and s["quarantined"] == 0
+
+
+def test_deadline_fault_bisects_and_recovers():
+    """A blown per-dispatch deadline is a fleet-scope fault: the dispatch
+    is split until the slow request is isolated, siblings re-serve on the
+    fast rung, and the culprit recovers one rung down."""
+    with enable_x64():
+        cfg = FitConfig(length=5, term=0.25, dtype="float64")
+        sc = ServerConfig(fit=cfg, deadline_s=120.0, max_bisect_depth=4,
+                          ladder=("host_windowed", "sequential"))
+        reqs = shared_queue(B=8, n=40, m=6, gs=4, seed=11)
+        ids = [f"req-{i}" for i in range(8)]
+        inj = FaultInjector(FaultPlan((
+            Fault(FAULT_DEADLINE, "req-5", level="host_windowed",
+                  extra_s=1e6),)))
+        server = SGLServer(sc, injector=inj)
+        out = server.process(reqs, ids)
+
+        clean = SGLServer(sc).process(reqs, ids)
+
+    assert all(oc.status == "served" for oc in out)
+    assert out[5].level == "sequential"         # deadline fault is scoped
+    assert any(a.outcome == "deadline" for a in out[5].attempts)
+    s = server.summary()
+    assert s["bisect_dispatches"] > 0
+    assert s["recovery_dispatch_overhead"] > 0
+    ref, got = betas_by_id(clean), betas_by_id(out)
+    for rid in ids:                 # bisected refits stay value-neutral
+        assert np.max(np.abs(got[rid] - ref[rid])) < 1e-10

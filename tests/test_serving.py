@@ -1,0 +1,295 @@
+"""Admission layer, input-validation front doors, fault-plan determinism,
+and the serving loop's structured outcomes (fast paths only — the
+fleet-scale chaos drills live in test_chaos.py, tier 2)."""
+import numpy as np
+import pytest
+
+from repro.core import GroupInfo
+from repro.core.estimator import SGL
+from repro.core.validation import (BAD_LAMBDA_GRID, BAD_LOSS,
+                                   DEGENERATE_DESIGN, GROUP_MISMATCH,
+                                   NON_FINITE_X, NON_FINITE_Y,
+                                   SHAPE_MISMATCH, input_issues)
+from repro.batch import BatchedSGL, FitRequest
+from repro.serving.admission import BAD_REQUEST, DeadLetter, admit, \
+    check_payload
+from repro.testing.faults import (FAULT_DEADLINE, FAULT_NAN_INPUT,
+                                  FAULT_SOLVER_DIVERGENCE, Fault,
+                                  FaultInjector, FaultPlan,
+                                  InjectedDispatchError)
+from repro.launch.server import LADDER, RequestOutcome, SGLServer, \
+    ServerConfig
+
+
+def small_problem(n=24, m=4, gs=4, seed=0):
+    rng = np.random.default_rng(seed)
+    g = GroupInfo.from_sizes([gs] * m)
+    X = rng.normal(size=(n, g.p))
+    y = X @ rng.normal(size=g.p) + 0.1 * rng.normal(size=n)
+    return X, y, g
+
+
+# ---------------------------------------------------------------------------
+# admission: structured reason codes, never exceptions
+# ---------------------------------------------------------------------------
+
+def test_admission_reason_codes():
+    X, y, g = small_problem()
+    bad = {
+        NON_FINITE_Y: dict(X=X, y=np.where(np.arange(len(y)) == 3,
+                                           np.nan, y), groups=g),
+        NON_FINITE_X: dict(X=np.full_like(X, np.inf), y=y, groups=g),
+        SHAPE_MISMATCH: dict(X=X, y=y[:-1], groups=g),
+        GROUP_MISMATCH: dict(X=X, y=y, groups=GroupInfo.from_sizes([3, 3])),
+        BAD_LOSS: dict(X=X, y=y, groups=g, loss="huber"),
+        BAD_LAMBDA_GRID: dict(X=X, y=y, groups=g,
+                              lambdas=np.array([0.1, 0.5])),
+        DEGENERATE_DESIGN: dict(X=np.zeros((0, 0)), y=np.zeros((0,)),
+                                groups=None),
+    }
+    bad[DEGENERATE_DESIGN]["groups"] = GroupInfo.from_sizes([1])
+    for code, payload in bad.items():
+        issues = check_payload(payload)
+        assert issues, f"expected {code} for {payload.keys()}"
+        assert code in [c for c, _ in issues]
+
+
+def test_admission_bad_request_payloads():
+    X, y, g = small_problem()
+    assert check_payload({})[0][0] == BAD_REQUEST           # missing fields
+    assert check_payload(object())[0][0] == BAD_REQUEST     # attribute bag
+    garbage_groups = {"X": X, "y": y, "groups": "not-a-layout"}
+    assert check_payload(garbage_groups)[0][0] == BAD_REQUEST
+
+
+def test_admit_isolates_bad_lanes():
+    X, y, g = small_problem()
+    good = FitRequest(X, y, g)
+    payloads = [good, {"X": X, "y": np.full_like(y, np.nan), "groups": g},
+                {"X": X, "y": y, "groups": g}, {}]
+    res = admit(payloads, ids=["a", "b", "c", "d"])
+    assert [rid for rid, _ in res.admitted] == ["a", "c"]
+    assert res.dead_ids == ("b", "d")
+    assert all(isinstance(dl, DeadLetter) for dl in res.dead)
+    assert res.dead[0].codes == (NON_FINITE_Y,)
+    assert "non_finite_y" in str(res.dead[0])
+    # admitted payloads became real FitRequests
+    assert all(isinstance(r, FitRequest) for _, r in res.admitted)
+
+
+# ---------------------------------------------------------------------------
+# front-door validation (satellite: estimators + FitRequest)
+# ---------------------------------------------------------------------------
+
+def test_fit_request_validates_at_construction():
+    X, y, g = small_problem()
+    with pytest.raises(ValueError, match="non_finite_y"):
+        FitRequest(X, np.full_like(y, np.nan), g)
+    with pytest.raises(ValueError, match="shape_mismatch"):
+        FitRequest(X, y[:-1], g)
+    with pytest.raises(ValueError, match="group_mismatch"):
+        FitRequest(X, y, GroupInfo.from_sizes([2, 2]))
+    with pytest.raises(ValueError, match="bad_lambda_grid"):
+        FitRequest(X, y, g, lambdas=np.array([0.1, np.nan]))
+    # constant y with an EXPLICIT grid is a legitimate null-path problem
+    FitRequest(X, np.zeros_like(y), g, lambdas=np.array([0.5, 0.4]))
+
+
+def test_sgl_fit_validates_inputs():
+    X, y, g = small_problem()
+    with pytest.raises(ValueError, match="non_finite_X"):
+        SGL(g).fit(np.where(np.arange(X.shape[1]) == 0, np.nan, X), y)
+    with pytest.raises(ValueError, match="shape_mismatch"):
+        SGL(g).fit(X, y[:-1])
+    # the estimator's own shape guard fires first for a layout mismatch
+    with pytest.raises(ValueError, match="for these groups"):
+        SGL(GroupInfo.from_sizes([2, 2])).fit(X, y)
+    with pytest.raises(ValueError, match="non_finite_y"):
+        SGL(g).fit(X, np.where(np.arange(len(y)) == 2, np.inf, y))
+
+
+def test_batched_sgl_fit_validates_inputs():
+    X, y, g = small_problem()
+    Y = np.stack([y, y])
+    Yb = Y.copy()
+    Yb[1, 0] = np.inf
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        BatchedSGL(g, length=3).fit(X, Yb)
+
+
+# ---------------------------------------------------------------------------
+# fault plans: deterministic, level-scoped
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_random_is_deterministic():
+    ids = [f"req-{i}" for i in range(64)]
+    a = FaultPlan.random(ids, rate=0.25, seed=7)
+    b = FaultPlan.random(ids, rate=0.25, seed=7)
+    assert a == b
+    c = FaultPlan.random(ids, rate=0.25, seed=8)
+    assert a != c
+    assert 0 < len(a.faults) < 40
+
+
+def test_fault_matching_scopes():
+    sticky = Fault(FAULT_SOLVER_DIVERGENCE, "r1", level=None)
+    scoped = Fault(FAULT_DEADLINE, "r2", level="device", extra_s=99.0)
+    plan = FaultPlan((sticky, scoped))
+    assert plan.matching(FAULT_SOLVER_DIVERGENCE, "r1", "device")
+    assert plan.matching(FAULT_SOLVER_DIVERGENCE, "r1", "reference")
+    assert plan.matching(FAULT_DEADLINE, "r2", "device")
+    assert not plan.matching(FAULT_DEADLINE, "r2", "sequential")
+    inj = FaultInjector(plan)
+    assert inj.extra_seconds(["r1", "r2"], "device") == 99.0
+    assert inj.extra_seconds(["r2"], "sequential") == 0.0
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("segfault", "r1")
+
+
+def test_injector_corrupts_a_copy_never_in_place():
+    X, y, g = small_problem()
+    req = FitRequest(X, y.copy(), g)
+    y_before = np.array(req.y, copy=True)
+    inj = FaultInjector(FaultPlan((Fault(FAULT_NAN_INPUT, "r0"),)))
+    corrupted = inj.corrupt_payload("r0", req)
+    assert not isinstance(corrupted, FitRequest)   # fresh duck-typed payload
+    assert np.isnan(np.asarray(corrupted["y"])).any()
+    np.testing.assert_array_equal(req.y, y_before)  # original untouched
+    assert corrupted["y"] is not req.y
+    assert check_payload(corrupted)[0][0] == NON_FINITE_Y
+    untouched = inj.corrupt_payload("other", req)
+    assert untouched is req
+
+
+# ---------------------------------------------------------------------------
+# serving loop: fast (sequential-rung) paths
+# ---------------------------------------------------------------------------
+
+def test_server_rejects_and_serves_in_order():
+    from repro.core.config import FitConfig
+    X, y, g = small_problem()
+    cfg = ServerConfig(fit=FitConfig(length=4, term=0.3),
+                       ladder=("sequential",))
+    server = SGLServer(cfg)
+    payloads = [FitRequest(X, y, g),
+                {"X": X, "y": y[:-1], "groups": g},
+                FitRequest(X, y, g, alpha=0.5)]
+    out = server.process(payloads, ids=["ok-1", "bad", "ok-2"])
+    assert [oc.req_id for oc in out] == ["ok-1", "bad", "ok-2"]
+    assert [oc.status for oc in out] == ["served", "rejected", "served"]
+    assert out[0].level == "sequential"
+    assert out[1].reasons[0][0] == SHAPE_MISMATCH
+    assert out[0].result is not None and len(out[0].result.lambdas) == 4
+    assert np.isfinite(out[0].result.betas).all()
+    rec = out[1].to_record()
+    assert rec["status"] == "rejected" and rec["attempts"] == []
+    s = server.summary()
+    assert s["served"] == 2 and s["rejected"] == 1
+    assert s["served_by_level"]["sequential"] == 2
+    assert s["requests_per_s"] > 0
+
+
+def test_server_quarantines_after_ladder_exhaustion():
+    from repro.core.config import FitConfig
+    X, y, g = small_problem()
+    cfg = ServerConfig(fit=FitConfig(length=3, term=0.3),
+                       ladder=("sequential", "reference"))
+    # sticky divergence: fires at EVERY rung -> must be quarantined
+    inj = FaultInjector(FaultPlan((Fault(FAULT_SOLVER_DIVERGENCE, "r0"),)))
+    server = SGLServer(cfg, injector=inj)
+    out = server.process([FitRequest(X, y, g), FitRequest(X, y, g)],
+                         ids=["r0", "r1"])
+    assert out[0].status == "quarantined"
+    assert [a.level for a in out[0].attempts] == ["sequential", "reference"]
+    assert all(a.outcome == "non_finite" for a in out[0].attempts)
+    assert out[0].reasons[0][0] == "exhausted_ladder"
+    assert out[1].status == "served"          # sibling unharmed
+    s = server.summary()
+    assert s["quarantined"] == 1 and s["served"] == 1
+    assert any("quarantine" in str(dl) for dl in server.dead_letters)
+
+
+def test_server_nan_input_fault_lands_in_dead_letters():
+    from repro.core.config import FitConfig
+    X, y, g = small_problem()
+    inj = FaultInjector(FaultPlan((Fault(FAULT_NAN_INPUT, "r0"),)))
+    server = SGLServer(ServerConfig(fit=FitConfig(length=3, term=0.3),
+                                    ladder=("sequential",)), injector=inj)
+    out = server.process([FitRequest(X, y, g)], ids=["r0"])
+    assert out[0].status == "rejected"
+    assert out[0].reasons[0][0] == NON_FINITE_Y
+    assert ("nan_input", "r0", "admission") in inj.fired
+    assert server.summary()["dispatches"] == 0    # never touched a fleet
+
+
+# ---------------------------------------------------------------------------
+# non-finite-carry guards in the solver stack
+# ---------------------------------------------------------------------------
+
+def test_active_claim_rejects_nan_claims():
+    import jax.numpy as jnp
+    from repro.core.engine import active_claim
+    beta = jnp.array([0.0, 1.5, jnp.nan, jnp.inf])
+    # `beta != 0` is True for NaN/Inf — a diverged carry would claim every
+    # coordinate active and blow the width cap; active_claim must not
+    got = np.asarray(active_claim(beta))
+    np.testing.assert_array_equal(got, [False, True, False, False])
+
+
+def test_solve_result_finite_default_and_divergence_error():
+    import jax.numpy as jnp
+    from repro.core.solvers import SolveResult
+    from repro.core.validation import PathDivergedError
+    # the pinned seed solver builds SolveResult with 5 positionals — the
+    # new `finite` field must default True to keep it untouched
+    r = SolveResult(jnp.zeros(3), jnp.asarray(0.0), 1, True, 1.0)
+    assert r.finite is True
+    err = PathDivergedError(7, partial="stub", detail="lambda=0.1")
+    assert err.point == 7 and err.partial == "stub"
+    assert "path point 7" in str(err) and "lambda=0.1" in str(err)
+
+
+# ---------------------------------------------------------------------------
+# converged-mask surfacing (satellite: diagnostics back-compat)
+# ---------------------------------------------------------------------------
+
+def test_converged_mask_surfaced_and_backcompat(tmp_path):
+    X, y, g = small_problem()
+    est = SGL(g, length=4, term=0.3).fit(X, y)
+    diag = est.diagnostics_
+    assert diag.converged.dtype == bool and len(diag.converged) == 4
+    assert "converged" in diag.summary()
+    p1 = str(tmp_path / "m.npz")
+    est.save(p1)
+    with np.load(p1, allow_pickle=False) as d:
+        saved = {k: d[k] for k in d.files}
+    assert "diag_converged" in saved
+    # a save from before the convergence-mask surfacing: key absent ->
+    # loader defaults to all-converged instead of raising
+    del saved["diag_converged"]
+    p2 = str(tmp_path / "old.npz")
+    np.savez(p2, **saved)
+    old = SGL.load(p2)
+    assert old.diagnostics_.converged.all()
+    assert len(old.diagnostics_.converged) == 4
+
+
+# ---------------------------------------------------------------------------
+# fit-on-demand queue survives malformed entries (satellite)
+# ---------------------------------------------------------------------------
+
+def test_fit_on_demand_quarantines_malformed_requests(capsys):
+    from repro.core.config import FitConfig
+    from repro.launch.serve_sgl import fit_on_demand
+    X, y, g = small_problem()
+    queue = [FitRequest(X, y, g),
+             {"X": X, "y": np.full_like(y, np.nan), "groups": g},
+             FitRequest(X, y, g, alpha=0.8)]
+    stats = fit_on_demand(queue, config=FitConfig(length=3, term=0.3))
+    assert stats["problems"] == 2 and stats["rejected"] == 1
+    assert len(stats["dead_letters"]) == 1
+    assert "non_finite_y" in stats["dead_letters"][0]
+    assert "quarantined" in capsys.readouterr().out
+    # an all-bad queue reports instead of crashing
+    empty = fit_on_demand([{}], config=FitConfig(length=3, term=0.3))
+    assert empty["problems"] == 0 and empty["rejected"] == 1
