@@ -29,17 +29,19 @@ lambda grid.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.adaptive import pca_weights
 from ..core.config import FitConfig
 from ..core.groups import GroupInfo
-from ..core.losses import Problem
-from ..core.path import lambda_path, path_start
-from ..core.penalties import Penalty
+from ..core.losses import Problem, gradient
+from ..core.path import lambda_path, null_intercept, path_start
+from ..core.penalties import Penalty, sgl_dual_norm
 from ..core.validation import validate_inputs
 from .engine import Fleet, FleetResult, fit_fleet_path
 
@@ -135,6 +137,33 @@ def _design_key(req: FitRequest) -> tuple:
     return (_IdKey(req.X), _IdKey(req.groups))
 
 
+def stacked_signature(n: int, g: GroupInfo, loss: str, grid_len: int) -> tuple:
+    """The padded power-of-two compile shape a problem of this geometry
+    lands in (the stacked-bucket key of :func:`build_fleets`)."""
+    return (pow2_ceil(n, 8),
+            pow2_ceil(g.p + 1, 8),       # >= p+1: room for >=1 pad col
+            pow2_ceil(g.m + 1),
+            pow2_ceil(max(g.max_size, 1)),
+            loss, grid_len)
+
+
+def coalesce_key(req: FitRequest, cfg: FitConfig) -> tuple:
+    """The shape bucket a request coalesces into for continuous batching.
+
+    Two requests with equal keys share every compiled fleet step (same
+    padded ``(n, p, m, max_size)`` pow2 shapes, loss, and grid length), so
+    a coalescer that only ever batches within one key never mixes compile
+    shapes in a dispatch.  This is deliberately *coarser* than
+    :func:`build_fleets`'s shared-design split — the scheduler still takes
+    the unpadded fast path for identical-``X`` lanes inside a coalesced
+    batch; the key only guarantees the batch is shape-pure.
+    """
+    grid_len = (len(np.asarray(req.lambdas)) if req.lambdas is not None
+                else cfg.length)
+    return stacked_signature(int(np.asarray(req.y).shape[0]), req.groups,
+                             req.loss, grid_len)
+
+
 def _grid_for(req: FitRequest, cfg: FitConfig, alpha: float, vw,
               dtype) -> np.ndarray:
     if req.lambdas is not None:
@@ -149,6 +178,86 @@ def _grid_for(req: FitRequest, cfg: FitConfig, alpha: float, vw,
     pen = Penalty(req.groups, alpha, *vw)
     lam1 = float(path_start(prob, pen, method=cfg.eps_method))
     return lambda_path(lam1, cfg.length, cfg.term)
+
+
+@partial(jax.jit, static_argnames=("loss", "intercept", "method", "shared"))
+def _lam1_lanes(X, Y, alphas, g: GroupInfo, loss: str, intercept: bool,
+                method: str, shared: bool):
+    """lambda_1 for a stack of plain-SGL lanes in ONE compiled call.
+
+    Traces the same ops as :func:`repro.core.path.path_start` (null
+    intercept -> null gradient -> SGL dual norm), vmapped over lanes:
+    ``Y [B, n]``, ``alphas [B]``, and ``X`` either shared ``[n, p]``
+    (broadcast) or per-lane ``[B, n, p]``.
+    """
+    def one(Xi, yi, ai):
+        prob = Problem(Xi, yi, loss, intercept)
+        g0 = gradient(prob, jnp.zeros((Xi.shape[1],), Xi.dtype),
+                      null_intercept(prob))
+        return sgl_dual_norm(g0, g, ai, method=method)
+    if shared:
+        return jax.vmap(lambda yi, ai: one(X, yi, ai))(Y, alphas)
+    return jax.vmap(one)(X, Y, alphas)
+
+
+def _auto_grids(requests, cfg: FitConfig, alphas, vw, dtype) -> list:
+    """Per-request lambda grids, with the plain-SGL auto-grid lanes batched
+    through :func:`_lam1_lanes`.
+
+    Per-lane ``path_start`` on the host costs milliseconds of un-jitted op
+    dispatch — for a 16-lane fleet that overhead dwarfed the fleet fit
+    itself (the profile showed ~85% of ``fit_fleet`` inside ``_grid_for``).
+    Lanes that cannot batch (explicit grids, adaptive/explicit weights, the
+    Pallas ``kernel`` eps method, ragged groups) keep the exact scalar
+    path.
+    """
+    grids: list = [None] * len(requests)
+    lanes = []
+    for i, r in enumerate(requests):
+        if (r.lambdas is not None or cfg.adaptive or vw[i][0] is not None
+                or cfg.eps_method == "kernel"):
+            grids[i] = _grid_for(r, cfg, alphas[i], vw[i], dtype)
+        else:
+            lanes.append(i)
+    if not lanes:
+        return grids
+    # shared-design groups batch under one broadcast X; leftovers batch by
+    # (shape, group-layout identity) — identical GroupInfo objects are the
+    # cheap sound guarantee that one g serves every lane of the call
+    shared: dict = {}
+    for i in lanes:
+        shared.setdefault((_design_key(requests[i]), requests[i].loss),
+                          []).append(i)
+    calls = []
+    solo: dict = {}
+    for (dk, loss), idxs in shared.items():
+        if len(idxs) > 1:
+            calls.append((idxs, True))
+        else:
+            i = idxs[0]
+            r = requests[i]
+            solo.setdefault((r.y.shape[0], _IdKey(r.groups), r.loss),
+                            []).append(i)
+    calls.extend((idxs, False) for idxs in solo.values())
+    factors = np.logspace(0, np.log10(cfg.term), cfg.length)
+    for idxs, is_shared in calls:
+        r0 = requests[idxs[0]]
+        # pad the lane axis to a power of two (repeat lane 0) so _lam1_lanes
+        # only ever compiles pow2 widths — a serving loop dispatching
+        # arbitrary coalesced widths stays on pre-warmed programs
+        pad = idxs + [idxs[0]] * (pow2_ceil(len(idxs)) - len(idxs))
+        Y = jnp.asarray(np.stack([np.asarray(requests[i].y, dtype)
+                                  for i in pad]))
+        al = jnp.asarray(np.asarray([alphas[i] for i in pad], dtype))
+        X = (jnp.asarray(r0.X, dtype) if is_shared
+             else jnp.asarray(np.stack([np.asarray(requests[i].X, dtype)
+                                        for i in pad])))
+        lam1 = np.asarray(_lam1_lanes(X, Y, al, r0.groups, r0.loss,
+                                      cfg.fit_intercept, cfg.eps_method,
+                                      is_shared), np.float64)
+        for j, i in enumerate(idxs):
+            grids[i] = lam1[j] * factors
+    return grids
 
 
 def _weights_for(req: FitRequest, cfg: FitConfig, dtype, cache: dict):
@@ -213,8 +322,7 @@ def build_fleets(requests: Sequence[FitRequest], config: FitConfig = None,
     alphas = [cfg.alpha if r.alpha is None else float(r.alpha)
               for r in requests]
     vw = [_weights_for(r, cfg, dtype, pca_cache) for r in requests]
-    grids = [_grid_for(r, cfg, alphas[i], vw[i], dtype)
-             for i, r in enumerate(requests)]
+    grids = _auto_grids(requests, cfg, alphas, vw, dtype)
 
     # ---- group lanes: shared-design first, padded shape buckets second ----
     by_key: dict = {}

@@ -1,13 +1,15 @@
 """Batched SGL/aSGL path serving from a saved estimator — no refitting —
-plus a fit-on-demand mode that drains a queue of fit requests through the
-batch scheduler.
+plus a fit-on-demand mode: a thin client of the continuous-batching
+server (:class:`repro.launch.server.ContinuousServer` — coalesced
+shape-pure fleets, admission, degradation ladder, warm compile cache,
+``compile_s`` reported apart from steady-state throughput).
 
     # serve a saved model (single path or a BatchedSGL fleet)
     PYTHONPATH=src python -m repro.launch.serve_sgl --model model.npz \
         --batch 64 --requests 512
 
-    # fit-on-demand: drain 16 queued fit requests through the fleet
-    # scheduler, then serve predictions from the freshly fitted paths
+    # fit-on-demand: drain 16 queued fit requests through the
+    # continuous server, then serve predictions from the fitted paths
     PYTHONPATH=src python -m repro.launch.serve_sgl --fit-demand 16
 
 Serving loads a ``repro.api`` estimator serialized with ``save()`` (a single
@@ -135,61 +137,87 @@ def demo_fit_queue(n_problems: int, seed: int = 0):
     return reqs, X
 
 
-def fit_on_demand(reqs, config=None, save_to: Optional[str] = None) -> dict:
-    """Drain a queue of :class:`repro.batch.FitRequest` s through the shape-
-    bucketing scheduler (fleets of up to ``config.batch_max`` problems per
-    vmapped fit) and report fit throughput.  ``save_to`` additionally
-    serializes a homogeneous shared-design queue as one BatchedSGL ``.npz``
-    built from the already-fitted paths (no refit); heterogeneous queues
-    are fitted and served without a fleet save.
+def fit_on_demand(reqs, config=None, save_to: Optional[str] = None,
+                  warm: bool = True) -> dict:
+    """Drain a queue of fit requests through the continuous-batching
+    server (:class:`repro.launch.server.ContinuousServer`): shape-pure
+    coalesced fleets, admission, the degradation ladder, and a warm
+    compile cache.  ``save_to`` additionally serializes a homogeneous
+    shared-design queue as one BatchedSGL ``.npz`` built from the
+    already-served paths (no refit); heterogeneous queues are fitted and
+    served without a fleet save.
 
     Queue entries may be duck-typed payloads (mappings / attribute bags)
     rather than validated ``FitRequest`` s: everything runs through the
-    admission layer first, and malformed entries are quarantined into
-    ``stats["dead_letters"]`` instead of crashing the drain (a 1-bad-in-16
-    queue still fits the 15 good problems)."""
-    from ..batch import build_fleets, fit_fleet
+    admission layer at dispatch, and malformed entries are quarantined
+    into ``stats["dead_letters"]`` instead of crashing the drain (a
+    1-bad-in-16 queue still fits the 15 good problems).
+
+    ``warm=True`` primes the compile cache up front so ``wall_s`` /
+    ``problems_per_s`` are STEADY-STATE numbers; the priming cost is
+    reported separately as ``compile_s`` (never folded into throughput —
+    that was the PR-6 bug)."""
+    from ..batch import FitRequest
     from ..core.config import FitConfig
-    from ..serving.admission import admit
+    from .server import ContinuousConfig, ContinuousServer, ServerConfig
     cfg = config if config is not None else FitConfig(length=20, term=0.1)
-    admission = admit(list(reqs))
-    for dl in admission.dead:
-        print(f"[serve_sgl] quarantined malformed request: {dl}")
-    reqs = [r for _, r in admission.admitted]
-    if not reqs:
-        return {"problems": 0, "rejected": len(admission.dead),
-                "dead_letters": [str(dl) for dl in admission.dead],
-                "fleets": 0, "fleet_sizes": [], "wall_s": 0.0,
-                "problems_per_s": 0.0, "path_points": 0}
-    buckets = build_fleets(reqs, cfg)       # scheduled ONCE, reused below
-    t0 = time.perf_counter()
-    results = fit_fleet(reqs, cfg, buckets=buckets)
-    dt = time.perf_counter() - t0
+    server = ContinuousServer(ContinuousConfig(
+        server=ServerConfig(fit=cfg), max_batch=cfg.batch_max,
+        result_cache=0))
+    compile_s = 0.0
+    if warm:
+        warmable = [r for r in reqs if isinstance(r, FitRequest)]
+        if warmable:
+            compile_s = server.warm(warmable)
+    reqs = list(reqs)
+    ids = [f"q{i}" for i in range(len(reqs))]
+    for rid, r in zip(ids, reqs):
+        server.submit(r, req_id=rid)
+    server.close()                           # flush: drain at full speed
+    outcomes = {oc.req_id: oc for oc in server.run()}
+    for dl in server.server.dead_letters:
+        if dl.stage == "admission":
+            print(f"[serve_sgl] quarantined malformed request: {dl}")
+        else:
+            print(f"[serve_sgl] dead-lettered request: {dl}")
+    served = [(i, outcomes[rid]) for i, rid in enumerate(ids)
+              if outcomes[rid].status == "served"]
+    rejected = sum(1 for rid in ids if outcomes[rid].status == "rejected")
+    dt = server.stats["run_wall_s"]
+    n_live = len(reqs) - rejected
     stats = {
-        "problems": len(reqs),
-        "rejected": len(admission.dead),
-        "dead_letters": [str(dl) for dl in admission.dead],
-        "fleets": len(buckets),
-        "fleet_sizes": [len(b.indices) for b in buckets],
+        "problems": n_live,
+        "rejected": rejected,
+        "dead_letters": [str(dl) for dl in server.server.dead_letters],
+        "fleets": server.stats["dispatched_fleets"],
+        "fleet_sizes": list(server.stats["fleet_sizes"]),
         "wall_s": dt,
-        "problems_per_s": len(reqs) / dt,
-        "path_points": int(sum(len(r.lambdas) for r in results)),
+        "compile_s": compile_s,
+        "problems_per_s": n_live / dt if dt > 0 else 0.0,
+        "path_points": int(sum(
+            len(oc.result.lambdas) for _, oc in served)),
     }
     print(f"[serve_sgl] fit-on-demand: {stats['problems']} problems in "
-          f"{stats['fleets']} fleet(s), {dt:.3f}s "
-          f"({stats['problems_per_s']:.1f} problems/s)")
+          f"{stats['fleets']} fleet(s), {dt:.3f}s steady state "
+          f"({stats['problems_per_s']:.1f} problems/s) "
+          f"+ {compile_s:.3f}s compile")
     if save_to is not None:
-        r0 = reqs[0]
-        homogeneous = all(
-            r.X is r0.X and r.groups is r0.groups and r.loss == r0.loss
-            and len(res.lambdas) == len(results[0].lambdas)
-            for r, res in zip(reqs, results))
+        pairs = [(reqs[i], oc.result) for i, oc in served]
+        homogeneous = (
+            len(pairs) == len(reqs) and pairs
+            and all(isinstance(r, FitRequest) for r, _ in pairs)
+            and all(r.X is pairs[0][0].X and r.groups is pairs[0][0].groups
+                    and r.loss == pairs[0][0].loss
+                    and len(res.lambdas) == len(pairs[0][1].lambdas)
+                    for r, res in pairs))
         if not homogeneous:
-            print("[serve_sgl] queue is not a homogeneous shared-design "
-                  "fleet; skipping the fleet save")
+            print("[serve_sgl] queue is not a fully-served homogeneous "
+                  "shared-design fleet; skipping the fleet save")
         else:
             from ..batch.estimator import fleet_estimator_from_results
-            fleet_estimator_from_results(reqs, results, cfg).save(save_to)
+            fleet_estimator_from_results(
+                [r for r, _ in pairs], [res for _, res in pairs],
+                cfg).save(save_to)
             print(f"[serve_sgl] fleet saved -> {save_to}")
     return stats
 

@@ -53,12 +53,14 @@ deterministically.
 from __future__ import annotations
 
 import argparse
+import concurrent.futures
 import dataclasses
 import json
 import time
 import warnings
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -72,6 +74,9 @@ from ..core.penalties import Penalty
 from ..core.validation import (LaneDivergedWarning, PathDivergedError,
                                UnconvergedPointsWarning)
 from ..serving.admission import DeadLetter, admit
+from ..serving.cache import CompileCache, ResultCache, WarmKey, fingerprint
+from ..serving.coalescer import Coalescer, CoalescerConfig, payload_key
+from ..serving.queue import RequestQueue
 
 LADDER = ("device", "host_windowed", "sequential", "reference")
 _FLEET_LEVELS = ("device", "host_windowed")
@@ -109,7 +114,15 @@ class Attempt:
 
 @dataclasses.dataclass
 class RequestOutcome:
-    """Structured per-request record: what happened, where, how long."""
+    """Structured per-request record: what happened, where, how long.
+
+    Latency is split at the dispatch boundary: ``queue_wait_s``
+    (``dispatched_at - enqueued_at`` — time spent waiting for lane-mates
+    or a free slot) vs ``latency_s`` (service time: the summed wall of
+    the attempts).  ``enqueued_at``/``dispatched_at`` are raw clock
+    readings (the continuous loop's queue clock); both stay 0.0 for the
+    synchronous ``process()`` path, where arrival == dispatch.
+    """
 
     req_id: str
     status: str                       # served | rejected | quarantined
@@ -117,12 +130,23 @@ class RequestOutcome:
     result: object = None             # PathResult when served
     reasons: list = dataclasses.field(default_factory=list)
     attempts: list = dataclasses.field(default_factory=list)
-    latency_s: float = 0.0
+    latency_s: float = 0.0            # service time (attempt walls)
+    enqueued_at: float = 0.0          # queue clock at arrival
+    dispatched_at: float = 0.0        # queue clock when serving began
+    queue_wait_s: float = 0.0         # dispatched_at - enqueued_at
+
+    @property
+    def total_latency_s(self) -> float:
+        """Queue wait + service: what the client actually experienced
+        (and what deadline checks compare against)."""
+        return self.queue_wait_s + self.latency_s
 
     def to_record(self) -> dict:
         """JSON-safe summary (results elided)."""
         return {"req_id": self.req_id, "status": self.status,
                 "level": self.level, "latency_s": self.latency_s,
+                "queue_wait_s": self.queue_wait_s,
+                "total_latency_s": self.total_latency_s,
                 "reasons": [list(r) for r in self.reasons],
                 "attempts": [dataclasses.asdict(a) for a in self.attempts]}
 
@@ -152,6 +176,7 @@ class SGLServer:
                       "bisect_dispatches": 0, "wall_s": 0.0,
                       "served_by_level": {lv: 0 for lv in LADDER}}
         self._latencies: list = []
+        self._queue_waits: list = []
         self.dead_letters: list = []
 
     # -- ladder plumbing ----------------------------------------------------
@@ -184,10 +209,14 @@ class SGLServer:
 
     # -- dispatch wrappers --------------------------------------------------
 
-    def _measure(self, req_ids: Sequence[str], level: str, fn):
+    def _measure(self, req_ids: Sequence[str], level: str, fn,
+                 queued_s: float = 0.0):
         """Run ``fn`` under the injector's dispatch hooks; returns
         ``(results | None, outcome, wall_s, detail)`` where outcome is
-        fleet-scope: ok | error | deadline."""
+        fleet-scope: ok | error | deadline.  ``queued_s`` is the worst
+        queue wait in this dispatch: the deadline gates TOTAL latency
+        (queue + service), so a request that burned its budget waiting
+        for lane-mates cannot ride along on future dispatches either."""
         self.stats["dispatches"] += 1
         t0 = time.perf_counter()
         try:
@@ -208,9 +237,10 @@ class SGLServer:
         wall = time.perf_counter() - t0
         if self.injector is not None:
             wall += self.injector.extra_seconds(req_ids, level)
-        if wall > self.config.deadline_s:
+        if wall + queued_s > self.config.deadline_s:
+            q = f" (incl. {queued_s:.3f}s queue wait)" if queued_s > 0 else ""
             return None, "deadline", wall, (
-                f"dispatch took {wall:.3f}s > deadline "
+                f"total latency {wall + queued_s:.3f}s{q} > deadline "
                 f"{self.config.deadline_s:.3f}s")
         return results, "ok", wall, ""
 
@@ -224,8 +254,10 @@ class SGLServer:
         cfg = self._level_config(level)
         if depth > 0:
             self.stats["bisect_dispatches"] += 1
+        queued = max((oc.queue_wait_s for _, _, oc in batch), default=0.0)
         results, outcome, wall, detail = self._measure(
-            ids, level, lambda: fit_fleet([r for _, r, _ in batch], cfg))
+            ids, level, lambda: fit_fleet([r for _, r, _ in batch], cfg),
+            queued_s=queued)
         if outcome == "ok":
             served, demoted = [], []
             for (rid, req, oc), res in zip(batch, results):
@@ -272,7 +304,8 @@ class SGLServer:
                     else cfg.eps_method)
             else:
                 fn = lambda: fit_path(prob, pen, lams, config=cfg)
-            res, outcome, wall, detail = self._measure([rid], level, fn)
+            res, outcome, wall, detail = self._measure(
+                [rid], level, fn, queued_s=oc.queue_wait_s)
             if outcome == "ok":
                 if self.injector is not None:
                     res = self.injector.poison_result(rid, level, res)
@@ -304,28 +337,53 @@ class SGLServer:
     # -- the loop -----------------------------------------------------------
 
     def process(self, payloads: Sequence,
-                ids: Optional[Sequence[str]] = None) -> list:
+                ids: Optional[Sequence[str]] = None,
+                enqueued_at: Optional[Sequence[float]] = None,
+                now: Optional[float] = None) -> list:
         """Drain one batch of payloads -> one :class:`RequestOutcome`
-        each, in payload order."""
+        each, in payload order.
+
+        ``enqueued_at`` (aligned with ``payloads``) carries each
+        request's arrival clock reading when a queue sits in front of
+        this loop; with ``now`` (same clock, defaults to
+        ``time.perf_counter()``) it yields per-request queue waits that
+        feed the total-latency deadline checks and the latency split in
+        :meth:`summary`.  Omitted -> queue wait 0 (the synchronous path).
+        """
         t_start = time.perf_counter()
         if ids is None:
             base = self.stats["submitted"]
             ids = [f"req-{base + i}" for i in range(len(payloads))]
         ids = [str(i) for i in ids]
+        if now is None:
+            now = time.perf_counter()
+        if enqueued_at is None:
+            enqueued_at = [now] * len(payloads)
+        if len(enqueued_at) != len(payloads):
+            raise ValueError(f"{len(enqueued_at)} enqueued_at stamps for "
+                             f"{len(payloads)} payloads")
+        stamps = {rid: (float(t), max(0.0, now - float(t)))
+                  for rid, t in zip(ids, enqueued_at)}
         self.stats["submitted"] += len(payloads)
         if self.injector is not None:
             payloads = [self.injector.corrupt_payload(rid, p)
                         for rid, p in zip(ids, payloads)]
 
+        def _outcome(rid, status, **kw):
+            enq, qw = stamps[rid]
+            return RequestOutcome(rid, status, enqueued_at=enq,
+                                  dispatched_at=now, queue_wait_s=qw, **kw)
+
         outcomes = {}
         admission = admit(payloads, ids)
         for dl in admission.dead:
             self.stats["rejected"] += 1
+            dl.queue_wait_s = stamps[dl.req_id][1]
             self.dead_letters.append(dl)
-            outcomes[dl.req_id] = RequestOutcome(
-                dl.req_id, "rejected", reasons=list(dl.reasons))
+            outcomes[dl.req_id] = _outcome(dl.req_id, "rejected",
+                                           reasons=list(dl.reasons))
 
-        pending = [(rid, req, RequestOutcome(rid, "quarantined"))
+        pending = [(rid, req, _outcome(rid, "quarantined"))
                    for rid, req in admission.admitted]
         for rid, _, oc in pending:
             outcomes[rid] = oc
@@ -352,7 +410,8 @@ class SGLServer:
                                f"level(s) failed; last: "
                                f"{oc.attempts[-1].outcome if oc.attempts else 'n/a'}"))
             self.dead_letters.append(DeadLetter(
-                rid, list(oc.reasons), stage="quarantine"))
+                rid, list(oc.reasons), stage="quarantine",
+                queue_wait_s=oc.queue_wait_s))
 
         wall = time.perf_counter() - t_start
         self.stats["wall_s"] += wall
@@ -362,22 +421,283 @@ class SGLServer:
             if oc.status == "rejected":
                 oc.latency_s = 0.0
             self._latencies.append(oc.latency_s)
+            self._queue_waits.append(oc.queue_wait_s)
         return out
 
     def summary(self) -> dict:
         """Cumulative JSON-safe stats: outcome counts, latency
-        percentiles, throughput, recovery overhead."""
+        percentiles (service, queue wait, and total — the split is the
+        whole point of the timestamps), throughput, recovery overhead."""
         lat = np.asarray([l for l in self._latencies if l > 0.0])
         s = dict(self.stats)
         s["served_by_level"] = dict(self.stats["served_by_level"])
         s["latency_p50_s"] = float(np.percentile(lat, 50)) if lat.size else 0.0
         s["latency_p99_s"] = float(np.percentile(lat, 99)) if lat.size else 0.0
+        qw = np.asarray(self._queue_waits)
+        tot = np.asarray([q + l for q, l in
+                          zip(self._queue_waits, self._latencies)])
+        tot = tot[tot > 0.0]
+        s["queue_wait_p50_s"] = float(np.percentile(qw, 50)) if qw.size else 0.0
+        s["queue_wait_p99_s"] = float(np.percentile(qw, 99)) if qw.size else 0.0
+        s["total_latency_p50_s"] = \
+            float(np.percentile(tot, 50)) if tot.size else 0.0
+        s["total_latency_p99_s"] = \
+            float(np.percentile(tot, 99)) if tot.size else 0.0
         s["requests_per_s"] = (self.stats["served"] / self.stats["wall_s"]
                                if self.stats["wall_s"] > 0 else 0.0)
         n_disp = self.stats["dispatches"]
         s["recovery_dispatch_overhead"] = (
             self.stats["bisect_dispatches"] / n_disp if n_disp else 0.0)
         s["dead_letters"] = [str(dl) for dl in self.dead_letters]
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: queue -> coalescer -> pipelined laddered dispatch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousConfig:
+    """Continuous-batching policy knobs.
+
+    ``max_batch``/``max_wait_s`` are the coalescer's release rule;
+    ``default_deadline_s`` is the per-request TOTAL-latency budget
+    stamped on submits that do not carry their own (None = no deadline).
+    ``result_cache`` sizes the served-path LRU (0 disables it).
+    ``pipeline=False`` degrades the loop to submit-then-wait — same
+    results, no overlap — which is the honest baseline for measuring
+    what pipelining buys.
+    """
+
+    server: Optional[ServerConfig] = None
+    max_batch: int = 32
+    max_wait_s: float = 0.05
+    queue_capacity: int = 256
+    default_deadline_s: Optional[float] = None
+    result_cache: int = 32
+    pipeline: bool = True
+
+    def __post_init__(self):
+        if self.result_cache < 0:
+            raise ValueError(
+                f"result_cache must be >= 0, got {self.result_cache}")
+
+
+class ContinuousServer:
+    """Continuous-batching front end over :class:`SGLServer`.
+
+    Producers :meth:`submit` payloads into a bounded
+    :class:`~repro.serving.queue.RequestQueue`; :meth:`run` drains it
+    through a :class:`~repro.serving.coalescer.Coalescer` (shape-pure
+    fleets, max-wait/max-batch release) and dispatches each fleet
+    through the inner server's full admission + degradation-ladder +
+    bisect machinery — a faulted coalesced fleet still degrades and
+    bisects per lane exactly as in the synchronous loop.
+
+    The dispatch is **pipelined**: fleet ``k+1`` is submitted to the
+    single worker thread before fleet ``k``'s outcomes are recorded, so
+    host-side finalization (outcome records, served-path cache writes)
+    overlaps the next fleet's device work; the loop blocks only at
+    outcome-recording time.  In front of dispatch sit the two caches:
+    deadline-expired requests are dead-lettered *before* costing a
+    fleet slot, repeat fits are served from the
+    :class:`~repro.serving.cache.ResultCache` (``level="cache"``), and
+    every real dispatch is counted against the
+    :class:`~repro.serving.cache.CompileCache` warm set so cold-compile
+    misses are visible in :meth:`summary`.
+    """
+
+    def __init__(self, config: Optional[ContinuousConfig] = None,
+                 injector=None, clock=time.perf_counter):
+        self.config = config if config is not None else ContinuousConfig()
+        self.server = SGLServer(self.config.server, injector=injector)
+        self.fit_config = self.server.fit_config
+        self.queue = RequestQueue(self.config.queue_capacity, clock=clock)
+        self.coalescer = Coalescer(
+            self.queue, self.fit_config,
+            CoalescerConfig(max_batch=self.config.max_batch,
+                            max_wait_s=self.config.max_wait_s))
+        # warm the EXACT config the first fleet rung dispatches under
+        # (driver and window are compile-relevant; warming the base config
+        # would prime a program no dispatch ever runs)
+        warm_cfg = self.fit_config
+        for lv in self.server.config.ladder:
+            if lv in _FLEET_LEVELS:
+                warm_cfg = self.server._level_config(lv)
+                break
+        self.compile_cache = CompileCache(warm_cfg)
+        self.result_cache = (ResultCache(self.config.result_cache)
+                             if self.config.result_cache > 0 else None)
+        self.outcomes: list = []         # completion order
+        self.stats = {"submitted": 0, "dispatched_fleets": 0,
+                      "fleet_sizes": [], "pipelined_dispatches": 0,
+                      "cache_served": 0, "expired": 0, "run_wall_s": 0.0}
+
+    # -- producer side -------------------------------------------------------
+
+    def submit(self, payload, req_id: Optional[str] = None,
+               deadline_s: Optional[float] = None, block: bool = True,
+               timeout: Optional[float] = None) -> str:
+        """Enqueue one payload (back-pressure per the queue's policy);
+        returns its request id."""
+        if deadline_s is None:
+            deadline_s = self.config.default_deadline_s
+        entry = self.queue.put(payload, req_id=req_id,
+                               deadline_s=deadline_s, block=block,
+                               timeout=timeout)
+        self.stats["submitted"] += 1
+        return entry.req_id
+
+    def warm(self, requests: Sequence[FitRequest]) -> float:
+        """Prime the compile cache for the shapes in ``requests``;
+        returns the seconds spent (``compile_s``, kept out of every
+        steady-state number)."""
+        return self.compile_cache.warm(requests)
+
+    def close(self) -> None:
+        """Stop accepting submits; already-queued requests still drain."""
+        self.queue.close()
+
+    # -- consumer side -------------------------------------------------------
+
+    def _expire(self, entries) -> None:
+        now = self.queue.clock()
+        for e in entries:
+            waited = max(0.0, now - e.enqueued_at)
+            self.stats["expired"] += 1
+            reasons = [("deadline",
+                        f"expired in queue after {waited:.3f}s "
+                        f"(deadline {e.deadline_s:.3f}s); "
+                        f"dead-lettered before dispatch")]
+            self.server.dead_letters.append(DeadLetter(
+                e.req_id, reasons, stage="expired", queue_wait_s=waited))
+            self.outcomes.append(RequestOutcome(
+                e.req_id, "expired", reasons=reasons,
+                enqueued_at=e.enqueued_at, dispatched_at=now,
+                queue_wait_s=waited))
+
+    def _try_result_cache(self, entries) -> tuple:
+        """Serve repeat fits from the LRU; returns ``(misses, fps)``
+        where ``fps`` maps req_id -> fingerprint for cacheable misses."""
+        fps: dict = {}
+        if self.result_cache is None:
+            return list(entries), fps
+        misses = []
+        now = self.queue.clock()
+        for e in entries:
+            if not isinstance(e.payload, FitRequest):
+                misses.append(e)       # not admitted yet: no fingerprint
+                continue
+            fp = fingerprint(e.payload, self.fit_config)
+            res = self.result_cache.get(fp)
+            if res is None:
+                fps[e.req_id] = fp
+                misses.append(e)
+                continue
+            self.stats["cache_served"] += 1
+            self.outcomes.append(RequestOutcome(
+                e.req_id, "served", level="cache", result=res,
+                enqueued_at=e.enqueued_at, dispatched_at=now,
+                queue_wait_s=max(0.0, now - e.enqueued_at)))
+        return misses, fps
+
+    def _finalize(self, handle, fps: dict) -> None:
+        """Block on one dispatch's outcomes, record them, and feed served
+        paths into the result cache — the only blocking point."""
+        outcomes = handle.result()
+        for oc in outcomes:
+            if (oc.status == "served" and self.result_cache is not None
+                    and oc.req_id in fps):
+                self.result_cache.put(fps[oc.req_id], oc.result)
+        self.outcomes.extend(outcomes)
+
+    def run(self) -> list:
+        """Drain until the queue is closed and empty; returns every
+        outcome recorded during this call (completion order)."""
+        t0 = time.perf_counter()
+        recorded_from = len(self.outcomes)
+        inflight = None                  # (future, fps) awaiting finalize
+        # jax's x64 switch is context/thread-scoped: a caller inside
+        # `with enable_x64():` must not have its dispatches silently
+        # truncated to float32 by the worker thread, so mirror the
+        # caller's effective mode into every dispatch
+        from jax.experimental import disable_x64, enable_x64
+        x64_ctx = (enable_x64
+                   if jax.dtypes.canonicalize_dtype(np.float64) == np.float64
+                   else disable_x64)
+
+        def dispatch(payloads, ids, enqueued_at, now):
+            with x64_ctx():
+                return self.server.process(payloads, ids,
+                                           enqueued_at=enqueued_at, now=now)
+
+        with concurrent.futures.ThreadPoolExecutor(max_workers=1) as pool:
+            while True:
+                nxt = self.coalescer.next_fleet()
+                if nxt is None:
+                    break
+                batch, expired = nxt
+                self._expire(expired)
+                live, fps = self._try_result_cache(batch)
+                if not live:
+                    continue
+                key = WarmKey(payload_key(live[0].payload, self.fit_config),
+                              self._fleet_width(len(live)))
+                self.compile_cache.lookup(key)
+                self.stats["dispatched_fleets"] += 1
+                self.stats["fleet_sizes"].append(len(live))
+                handle = pool.submit(
+                    dispatch,
+                    [e.payload for e in live], [e.req_id for e in live],
+                    [e.enqueued_at for e in live], self.queue.clock())
+                if inflight is not None:
+                    # fleet k+1 already submitted: k's sync happens here,
+                    # overlapped with k+1's device work
+                    self.stats["pipelined_dispatches"] += 1
+                    self._finalize(*inflight)
+                inflight = (handle, fps)
+                if not self.config.pipeline:
+                    self._finalize(*inflight)
+                    inflight = None
+            if inflight is not None:
+                self._finalize(*inflight)
+        self.stats["run_wall_s"] += time.perf_counter() - t0
+        return self.outcomes[recorded_from:]
+
+    def _fleet_width(self, n: int) -> int:
+        cfg = self.fit_config
+        if not cfg.batch_pad:
+            return n
+        from ..batch.scheduler import pow2_ceil
+        return min(pow2_ceil(n), cfg.batch_max)
+
+    def summary(self) -> dict:
+        """The inner server's cumulative summary plus the continuous
+        layer: queue/coalescer/cache counters and whole-loop throughput
+        (cache hits and expiries included, compile time excluded)."""
+        s = self.server.summary()
+        done = [oc for oc in self.outcomes if oc.status != "expired"]
+        lat = np.asarray([oc.total_latency_s for oc in done])
+        qw = np.asarray([oc.queue_wait_s for oc in self.outcomes])
+        s.update({
+            "continuous": dict(self.stats),
+            "queue": {"enqueued": self.queue.enqueued,
+                      "rejected_full": self.queue.rejected_full},
+            "coalescer": dict(self.coalescer.stats),
+            "compile_cache": self.compile_cache.stats(),
+            "result_cache": (self.result_cache.stats()
+                             if self.result_cache is not None else None),
+            "compile_s": self.compile_cache.compile_s,
+        })
+        s["total_latency_p50_s"] = \
+            float(np.percentile(lat, 50)) if lat.size else 0.0
+        s["total_latency_p99_s"] = \
+            float(np.percentile(lat, 99)) if lat.size else 0.0
+        s["queue_wait_p50_s"] = float(np.percentile(qw, 50)) if qw.size else 0.0
+        s["queue_wait_p99_s"] = float(np.percentile(qw, 99)) if qw.size else 0.0
+        served = s["served"] + self.stats["cache_served"]
+        s["requests_per_s"] = (served / self.stats["run_wall_s"]
+                               if self.stats["run_wall_s"] > 0 else 0.0)
         return s
 
 

@@ -1,14 +1,35 @@
-"""Serving-side robustness: request admission and dead-letter records.
+"""Serving-side machinery: admission, queueing, coalescing, caching.
 
-:mod:`repro.serving.admission` validates every incoming fit payload
-*before* it is scheduled into a vmapped fleet, turning malformed requests
-into structured :class:`~repro.serving.admission.DeadLetter` records
-instead of mid-fleet exceptions.  The fault-tolerant serving loop
-(:mod:`repro.launch.server`) builds on it; ``serve_sgl --fit-demand``
-uses it to quarantine malformed queue entries.
+* :mod:`repro.serving.admission` validates every incoming fit payload
+  *before* it is scheduled into a vmapped fleet, turning malformed
+  requests into structured :class:`~repro.serving.admission.DeadLetter`
+  records instead of mid-fleet exceptions.
+* :mod:`repro.serving.queue` is the bounded async request queue
+  (arrival timestamps, per-request total-latency deadlines,
+  back-pressure) that decouples producers from fleet formation.
+* :mod:`repro.serving.coalescer` drains the queue into shape-pure
+  fleets (max-wait / max-batch policy over the scheduler's compile-
+  shape buckets) and dead-letters deadline-expired requests before
+  they cost a dispatch.
+* :mod:`repro.serving.cache` keeps serving warm: a compile cache primed
+  at server start (``compile_s`` measured apart from steady state) and
+  a content-fingerprinted LRU of served ``.npz`` paths so repeat fits
+  are cache hits.
+
+The fault-tolerant serving loops (:mod:`repro.launch.server`:
+``SGLServer`` synchronous, ``ContinuousServer`` pipelined) compose all
+four; ``serve_sgl --fit-demand`` is a thin client of the continuous one.
 """
 from .admission import (BAD_REQUEST, AdmissionResult, DeadLetter, admit,
                         check_payload, to_request)
+from .cache import (CompileCache, ResultCache, WarmKey, fingerprint,
+                    load_path_result, save_path_result)
+from .coalescer import JUNK_KEY, Coalescer, CoalescerConfig, payload_key
+from .queue import (QueueClosed, QueueFull, RequestQueue, ServeRequest)
 
 __all__ = ["BAD_REQUEST", "AdmissionResult", "DeadLetter", "admit",
-           "check_payload", "to_request"]
+           "check_payload", "to_request",
+           "CompileCache", "ResultCache", "WarmKey", "fingerprint",
+           "load_path_result", "save_path_result",
+           "JUNK_KEY", "Coalescer", "CoalescerConfig", "payload_key",
+           "QueueClosed", "QueueFull", "RequestQueue", "ServeRequest"]

@@ -41,13 +41,19 @@ class DeadLetter:
     """One rejected/quarantined request with structured reasons.
 
     ``stage`` records where the request died: ``"admission"`` (never
-    dispatched) or ``"quarantine"`` (dispatched, isolated by the serving
-    loop after faults survived the whole degradation ladder).
+    dispatched), ``"expired"`` (total-latency deadline blown while still
+    queued — dead-lettered *before* costing a dispatch), or
+    ``"quarantine"`` (dispatched, isolated by the serving loop after
+    faults survived the whole degradation ladder).  ``queue_wait_s``
+    separates how long the request sat queued from any service time its
+    attempt records carry — a quarantine after 5s of queue wait and a
+    quarantine after 5s of failing dispatches are different incidents.
     """
 
     req_id: str
     reasons: list                    # [(code, detail), ...]
     stage: str = "admission"
+    queue_wait_s: float = 0.0
 
     @property
     def codes(self) -> tuple:
@@ -55,7 +61,9 @@ class DeadLetter:
 
     def __str__(self) -> str:
         why = "; ".join(f"[{c}] {d}" for c, d in self.reasons)
-        return f"DeadLetter({self.req_id}, {self.stage}): {why}"
+        q = (f" after {self.queue_wait_s:.3f}s queued"
+             if self.queue_wait_s > 0 else "")
+        return f"DeadLetter({self.req_id}, {self.stage}{q}): {why}"
 
 
 @dataclasses.dataclass

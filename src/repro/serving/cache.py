@@ -1,0 +1,248 @@
+"""Serving caches: warm compiles at startup, remember served paths.
+
+Two distinct cache problems hide inside "serving is slow":
+
+* **Cold compiles.**  The first dispatch of every compiled shape pays
+  XLA tracing + compilation — seconds, against milliseconds of solve.
+  The PR-6 bench simply folded that into wall clock (or hand-warmed
+  around it).  :class:`CompileCache` makes the warm-up a first-class,
+  *measured* step: prime it at server start with representative
+  requests and it runs one synthetic fleet drain per distinct compile
+  shape (``(coalesce_key, padded fleet width)`` under one
+  ``FitConfig``/``EngineKey``), recording ``compile_s`` separately so
+  steady-state throughput numbers never smuggle compile time again.
+  At dispatch time :meth:`lookup` keeps hit/miss counters — a miss in
+  production is a shape the warm set did not cover, which is exactly
+  the signal to extend it.
+* **Repeat fits.**  Serving traffic repeats itself (the same design +
+  response + grid arriving again is a cache hit, not a fleet slot).
+  :class:`ResultCache` is a bounded LRU of served paths keyed by a
+  CONTENT fingerprint of the fit inputs (:func:`fingerprint`), each
+  value a ``.npz`` on disk (same array layout idea as the estimator
+  saves: results survive as files, not pinned device memory), with
+  hit/miss/eviction counters.  Scheduling-only knobs
+  (``batch_max``/``batch_pad``/``verbose``) are excluded from the
+  fingerprint — they are value-neutral, so a re-chunked server still
+  hits; everything value-affecting (screen/solver/tolerances/grid/
+  weights/dtype/...) is in.
+
+Design digests are memoized per array *object* (weakly — the memo never
+keeps an array alive), so a shared-design queue hashes its ``X`` once,
+not once per lane.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import os
+import tempfile
+import time
+import weakref
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..batch.scheduler import FitRequest, coalesce_key, fit_fleet, pow2_ceil
+from ..core.config import FitConfig
+from ..core.path import PathDiagnostics, PathResult, _DIAG_FIELDS
+
+# -- content fingerprints ----------------------------------------------------
+
+# id(array) -> (weakref, hex digest): identity-memoized so shared designs
+# hash once.  The weakref guard means a recycled id can never serve a dead
+# array's digest (same soundness argument as scheduler._IdKey, but a cache
+# must NOT retain, so weak instead of strong references).
+_DIGESTS: Dict[int, tuple] = {}
+
+
+def _array_digest(a) -> str:
+    a = np.asarray(a)
+    key = id(a)
+    hit = _DIGESTS.get(key)
+    if hit is not None and hit[0]() is a:
+        return hit[1]
+    h = hashlib.sha1()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    digest = h.hexdigest()
+    try:
+        _DIGESTS[key] = (weakref.ref(a), digest)
+    except TypeError:
+        pass                         # non-weakref-able views: just recompute
+    return digest
+
+
+def fingerprint(req: FitRequest, cfg: FitConfig) -> str:
+    """Content fingerprint of one fit: design + response + groups + grid +
+    penalty + the value-affecting ``FitConfig`` slice."""
+    h = hashlib.sha1()
+    h.update(_array_digest(req.X).encode())
+    h.update(_array_digest(np.asarray(req.y)).encode())
+    h.update(_array_digest(np.asarray(req.groups.sizes)).encode())
+    alpha = cfg.alpha if req.alpha is None else float(req.alpha)
+    h.update(f"alpha={alpha}|loss={req.loss}".encode())
+    if req.lambdas is not None:
+        h.update(_array_digest(np.asarray(req.lambdas, np.float64)).encode())
+    else:
+        h.update(f"auto|{cfg.length}|{cfg.term}".encode())
+    if req.weights is not None:
+        v, w = req.weights
+        h.update(_array_digest(np.asarray(v)).encode())
+        h.update(_array_digest(np.asarray(w)).encode())
+    cfg_d = cfg.to_dict()
+    for k in ("batch_max", "batch_pad", "verbose"):   # value-neutral
+        cfg_d.pop(k, None)
+    h.update(repr(sorted(cfg_d.items())).encode())
+    return h.hexdigest()
+
+
+# -- served-path result cache (LRU of .npz files) ----------------------------
+
+def save_path_result(path: str, result: PathResult) -> None:
+    """One :class:`PathResult` -> one ``.npz`` (no pickling)."""
+    diag = result.diagnostics
+    arrays = {f"diag_{k}": getattr(diag, k) for k in _DIAG_FIELDS}
+    np.savez(path, lambdas=np.asarray(result.lambdas),
+             betas=np.asarray(result.betas),
+             intercepts=np.asarray(result.intercepts),
+             window_mode=np.asarray(diag.window_mode),
+             screen_time=np.asarray(result.screen_time),
+             solve_time=np.asarray(result.solve_time),
+             buckets=np.asarray(result.buckets, np.int64), **arrays)
+
+
+def load_path_result(path: str) -> PathResult:
+    with np.load(path, allow_pickle=False) as d:
+        diag = PathDiagnostics(
+            **{k: d[f"diag_{k}"] for k in _DIAG_FIELDS},
+            window_mode=bool(d["window_mode"]))
+        return PathResult(d["lambdas"], d["betas"], d["intercepts"], diag,
+                          float(d["screen_time"]), float(d["solve_time"]),
+                          buckets=tuple(int(b) for b in d["buckets"]))
+
+
+class ResultCache:
+    """Bounded LRU ``fingerprint -> served path .npz`` with counters."""
+
+    def __init__(self, capacity: int = 32, cache_dir: Optional[str] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.cache_dir = (cache_dir if cache_dir is not None
+                          else tempfile.mkdtemp(prefix="sgl-results-"))
+        os.makedirs(self.cache_dir, exist_ok=True)
+        self._lru: "collections.OrderedDict[str, str]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def get(self, fp: str) -> Optional[PathResult]:
+        """The cached path for ``fp`` (refreshing recency), else None."""
+        path = self._lru.get(fp)
+        if path is None:
+            self.misses += 1
+            return None
+        self._lru.move_to_end(fp)
+        self.hits += 1
+        return load_path_result(path)
+
+    def put(self, fp: str, result: PathResult) -> None:
+        """Insert (or refresh) one served path; evicts the LRU entry —
+        and deletes its file — past capacity."""
+        if fp in self._lru:
+            self._lru.move_to_end(fp)
+            return
+        path = os.path.join(self.cache_dir, f"{fp}.npz")
+        save_path_result(path, result)
+        self._lru[fp] = path
+        while len(self._lru) > self.capacity:
+            _, victim = self._lru.popitem(last=False)
+            self.evictions += 1
+            try:
+                os.remove(victim)
+            except OSError:
+                pass
+
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "entries": len(self._lru),
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+# -- warm compile cache ------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WarmKey:
+    """One compiled serving shape: the coalesce bucket + the padded fleet
+    width, under one config (whose ``EngineKey`` the jit caches key on)."""
+
+    shape: tuple                     # scheduler coalesce_key
+    fleet_pow2: int                  # padded fleet width the chunk compiles
+
+
+class CompileCache:
+    """Tracks which serving shapes have been compiled, and primes them.
+
+    :meth:`warm` runs one real (synthetic-data is the caller's choice)
+    fleet drain per distinct :class:`WarmKey` in the sample, so every jit
+    cache a later dispatch of that shape needs — fleet steps, device
+    loop, diagnostics — is populated up front; the summed wall clock is
+    returned as ``compile_s`` and accumulated on the instance.
+    ``lookup`` is the dispatch-time counter seam.
+    """
+
+    def __init__(self, fit_config: FitConfig):
+        self.fit_config = fit_config
+        self.warmed: set = set()
+        self.compile_s = 0.0
+        self.hits = 0
+        self.misses = 0
+
+    def key_for(self, requests: Sequence[FitRequest]) -> WarmKey:
+        """The :class:`WarmKey` a shape-pure batch dispatches under."""
+        cfg = self.fit_config
+        width = min(pow2_ceil(len(requests)), cfg.batch_max) \
+            if cfg.batch_pad else len(requests)
+        return WarmKey(coalesce_key(requests[0], cfg), width)
+
+    def lookup(self, key: WarmKey) -> bool:
+        """Was this shape pre-warmed?  Counts the answer either way."""
+        if key in self.warmed:
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def warm(self, requests: Sequence[FitRequest]) -> float:
+        """Prime every distinct serving shape in ``requests``; returns the
+        seconds spent (all of it compile + throwaway solve work, none of
+        which a steady-state measurement should ever include).  Shapes
+        already warmed are skipped, so repeated priming is cheap."""
+        by_key: Dict[WarmKey, List[FitRequest]] = {}
+        groups: Dict[tuple, List[FitRequest]] = {}
+        cfg = self.fit_config
+        for r in requests:
+            groups.setdefault(coalesce_key(r, cfg), []).append(r)
+        for batch in groups.values():
+            batch = batch[:cfg.batch_max]
+            by_key.setdefault(self.key_for(batch), batch)
+        t0 = time.perf_counter()
+        for key, batch in by_key.items():
+            if key in self.warmed:
+                continue
+            fit_fleet(batch, cfg)            # results discarded: warm only
+            self.warmed.add(key)
+        spent = time.perf_counter() - t0
+        self.compile_s += spent
+        return spent
+
+    def stats(self) -> dict:
+        return {"warmed_shapes": len(self.warmed),
+                "compile_s": self.compile_s,
+                "hits": self.hits, "misses": self.misses}

@@ -1,0 +1,181 @@
+"""Coalescer: drain the request queue into shape-pure fleets.
+
+The throughput premise of continuous batching is that a vmapped fleet
+dispatch costs roughly the same as a single-lane dispatch, so arrivals
+that can share compiled shapes should ride together.  The constraint is
+latency: a lone request must not be starved waiting for lane-mates that
+never come.  :class:`Coalescer` is that policy, and nothing else — it
+owns no fitting, no validation, no fault handling:
+
+* requests are grouped by :func:`repro.batch.scheduler.coalesce_key`
+  (the padded pow2 compile shape + loss + grid length), so every batch
+  it emits is **shape-pure** — the scheduler will never mix compile
+  shapes inside one of its dispatches;
+* the *oldest* pending request picks which shape group goes next (FIFO
+  fairness across shapes — a hot shape cannot starve a cold one);
+* a group is released when it reaches ``max_batch`` lanes OR its oldest
+  member has waited ``max_wait_s`` (whichever first); on a closed queue
+  the wait is skipped entirely — shutdown flushes at full speed;
+* requests already past their TOTAL deadline are split out *before*
+  dispatch (``expired``) so a dead request never costs a fleet slot —
+  the server dead-letters them without an attempt record.
+
+Payloads are duck-typed at this layer (admission happens at dispatch,
+inside the server): a payload whose shape cannot even be read gets the
+sentinel junk key and is batched with its fellow-garbage — it will be
+dead-lettered by admission, again without costing a real fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..batch.scheduler import FitRequest, coalesce_key, stacked_signature
+from ..core.config import FitConfig
+from ..core.groups import GroupInfo
+from .queue import RequestQueue, ServeRequest
+
+#: key for payloads whose shapes cannot be extracted; they still flow
+#: through (one batch of junk -> admission dead-letters the lot)
+JUNK_KEY = ("_unreadable_",)
+
+
+def _get(payload, field, default=None):
+    if isinstance(payload, Mapping):
+        return payload.get(field, default)
+    return getattr(payload, field, default)
+
+
+def payload_key(payload, cfg: FitConfig) -> tuple:
+    """Best-effort :func:`coalesce_key` for a not-yet-admitted payload.
+
+    Never raises: malformed payloads coalesce under :data:`JUNK_KEY`.
+    """
+    if isinstance(payload, FitRequest):
+        return coalesce_key(payload, cfg)
+    try:
+        g = _get(payload, "groups")
+        if not isinstance(g, GroupInfo):
+            g = GroupInfo.from_sizes(np.asarray(g, np.int64))
+        y = np.asarray(_get(payload, "y"))
+        lams = _get(payload, "lambdas")
+        grid_len = len(np.asarray(lams)) if lams is not None else cfg.length
+        loss = _get(payload, "loss") or "linear"
+        return stacked_signature(int(y.shape[0]), g, str(loss), grid_len)
+    except Exception:
+        return JUNK_KEY
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescerConfig:
+    """Batching-policy knobs.
+
+    ``max_wait_s`` bounds the latency a request can pay waiting for
+    lane-mates; ``max_batch`` bounds fleet width (usually matched to
+    ``FitConfig.batch_max`` so one coalesced batch is one scheduler
+    chunk).  ``poll_s`` is the wait granularity while a group ages.
+    """
+
+    max_batch: int = 32
+    max_wait_s: float = 0.05
+    poll_s: float = 0.005
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_s < 0:
+            raise ValueError(
+                f"max_wait_s must be >= 0, got {self.max_wait_s}")
+        if self.poll_s <= 0:
+            raise ValueError(f"poll_s must be positive, got {self.poll_s}")
+
+
+class Coalescer:
+    """Shape-pure batch former over a :class:`RequestQueue`."""
+
+    def __init__(self, queue: RequestQueue, fit_config: FitConfig,
+                 config: Optional[CoalescerConfig] = None):
+        self.queue = queue
+        self.fit_config = fit_config
+        self.config = config if config is not None else CoalescerConfig()
+        self._key_cache: dict = {}       # seq -> coalesce key (computed once)
+        self.stats = {"batches": 0, "batched_requests": 0, "expired": 0,
+                      "full_batches": 0, "timeout_batches": 0,
+                      "flush_batches": 0}
+
+    def _key_of(self, entry: ServeRequest) -> tuple:
+        k = self._key_cache.get(entry.seq)
+        if k is None:
+            k = payload_key(entry.payload, self.fit_config)
+            self._key_cache[entry.seq] = k
+        return k
+
+    def _split_expired(self, entries: List[ServeRequest]
+                       ) -> Tuple[List[ServeRequest], List[ServeRequest]]:
+        now = self.queue.clock()
+        live = [e for e in entries if not e.expired(now)]
+        dead = [e for e in entries if e.expired(now)]
+        return live, dead
+
+    def next_fleet(self) -> Optional[Tuple[List[ServeRequest],
+                                           List[ServeRequest]]]:
+        """Block until one shape group is ready; returns ``(batch,
+        expired)`` — both drawn from the queue exactly once — or ``None``
+        when the queue is closed and fully drained.
+
+        The release rule, applied to the group owning the globally oldest
+        pending request: full (``max_batch``), aged out (oldest member
+        waited ``max_wait_s``), or the queue is closed (flush).
+        """
+        cfg = self.config
+        while True:
+            if not self.queue.wait_pending(timeout=cfg.poll_s):
+                if self.queue.closed:
+                    return None
+                continue
+            pending = self.queue.pending()
+            if not pending:
+                continue
+            oldest = min(pending, key=lambda e: e.seq)
+            key = self._key_of(oldest)
+            group = [e for e in pending if self._key_of(e) == key]
+            group.sort(key=lambda e: e.seq)
+            group = group[:cfg.max_batch]
+            closed = self.queue.closed
+            waited = self.queue.clock() - oldest.enqueued_at
+            if (len(group) < cfg.max_batch and not closed
+                    and waited < cfg.max_wait_s):
+                # not full, not aged: sleep until a NEW arrival (a
+                # potential lane-mate) or the remaining age budget lapses
+                self.queue.wait_arrival(
+                    self.queue.enqueued,
+                    timeout=min(cfg.poll_s, cfg.max_wait_s - waited))
+                continue
+            taken = self.queue.take(group)
+            if not taken:                 # lost a race with another consumer
+                continue
+            for e in taken:
+                self._key_cache.pop(e.seq, None)
+            live, dead = self._split_expired(taken)
+            self.stats["batches"] += 1
+            self.stats["batched_requests"] += len(live)
+            self.stats["expired"] += len(dead)
+            if len(group) >= cfg.max_batch:
+                self.stats["full_batches"] += 1
+            elif closed:
+                self.stats["flush_batches"] += 1
+            else:
+                self.stats["timeout_batches"] += 1
+            return live, dead
+
+    def drain_all(self) -> list:
+        """Every remaining fleet (used after ``queue.close()``); returns a
+        list of ``(batch, expired)`` tuples."""
+        out = []
+        while True:
+            nxt = self.next_fleet()
+            if nxt is None:
+                return out
+            out.append(nxt)

@@ -1,0 +1,188 @@
+"""Bounded async request queue: the front half of continuous batching.
+
+The PR-6 serving loop (`SGLServer.process`) is synchronous: it forms one
+fleet from whatever list it is handed and blocks until every outcome is
+recorded.  Real serving traffic does not arrive as lists — requests show
+up one at a time, with heterogeneous shapes and their own latency
+budgets, and throughput dies if each arrival pays its own fleet dispatch.
+:class:`RequestQueue` is the decoupling point: producers ``put()``
+payloads (any thread), the coalescer (:mod:`repro.serving.coalescer`)
+drains them into shape-bucketed fleets on the consumer side.
+
+Design points:
+
+* **Bounded.**  ``capacity`` is the back-pressure valve: a full queue
+  either blocks the producer (``block=True``, the load-shedding-free
+  default) or raises :class:`QueueFull` immediately — an unbounded queue
+  under overload just converts throughput collapse into memory collapse.
+* **Timestamped.**  Every entry records ``enqueued_at`` from the queue's
+  injectable ``clock`` at ``put()`` time, so queue wait is measured from
+  true arrival, not from when the coalescer happened to look.  The
+  clock is injectable for deterministic tests (and so simulated arrival
+  processes need not sleep through real seconds).
+* **Per-request deadlines.**  ``deadline_s`` is a TOTAL latency budget
+  (queue wait + service).  The queue itself never drops anything — the
+  coalescer checks expiry at drain time so an already-dead request is
+  dead-lettered *before* it costs a dispatch, and the server re-checks
+  with service time included (see ``SGLServer.process``).
+
+The queue imposes no batching policy: ``pending()`` exposes a snapshot
+and ``take()`` removes an exact set of entries, which is all the
+coalescer needs to implement shape-pure draining on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+class QueueFull(RuntimeError):
+    """``put(block=False)`` on a full queue (back-pressure signal)."""
+
+
+class QueueClosed(RuntimeError):
+    """``put()`` after ``close()`` — the serving loop is shutting down."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One queued payload plus its arrival metadata.
+
+    ``payload`` is deliberately duck-typed (anything the admission layer
+    accepts); ``seq`` is the queue-assigned monotone arrival index used
+    for FIFO fairness and exactly-once accounting.
+    """
+
+    req_id: str
+    payload: object
+    enqueued_at: float               # queue clock at put() time
+    deadline_s: Optional[float] = None   # total (queue + service) budget
+    seq: int = 0
+
+    def expired(self, now: float) -> bool:
+        """Already over its total budget before any service happened?"""
+        return (self.deadline_s is not None
+                and (now - self.enqueued_at) > self.deadline_s)
+
+
+class RequestQueue:
+    """Thread-safe bounded FIFO of :class:`ServeRequest` s.
+
+    Producers call :meth:`put`; the coalescer consumes via
+    :meth:`wait_pending` / :meth:`pending` / :meth:`take`.  ``close()``
+    wakes every waiter; a closed queue rejects new work but drains
+    whatever is still inside (flush semantics — nothing is lost on
+    shutdown).
+    """
+
+    def __init__(self, capacity: int = 256,
+                 clock: Callable[[], float] = time.perf_counter):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.clock = clock
+        self._entries: List[ServeRequest] = []
+        self._cond = threading.Condition()
+        self._closed = False
+        self._seq = itertools.count()
+        self.enqueued = 0            # lifetime counters (stats surface)
+        self.rejected_full = 0
+
+    # -- producer side -------------------------------------------------------
+
+    def put(self, payload, req_id: Optional[str] = None,
+            deadline_s: Optional[float] = None, block: bool = True,
+            timeout: Optional[float] = None) -> ServeRequest:
+        """Enqueue one payload; returns its :class:`ServeRequest` record.
+
+        Raises :class:`QueueFull` when non-blocking (or the block timed
+        out) and :class:`QueueClosed` after :meth:`close`.
+        """
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
+        with self._cond:
+            if self._closed:
+                raise QueueClosed("put() on a closed queue")
+            if len(self._entries) >= self.capacity:
+                if not block:
+                    self.rejected_full += 1
+                    raise QueueFull(
+                        f"queue at capacity {self.capacity}")
+                ok = self._cond.wait_for(
+                    lambda: self._closed
+                    or len(self._entries) < self.capacity,
+                    timeout=timeout)
+                if self._closed:
+                    raise QueueClosed("queue closed while blocked on put()")
+                if not ok:
+                    self.rejected_full += 1
+                    raise QueueFull(
+                        f"queue stayed at capacity {self.capacity} for "
+                        f"{timeout}s")
+            seq = next(self._seq)
+            rid = str(req_id) if req_id is not None else f"req-{seq}"
+            entry = ServeRequest(rid, payload, float(self.clock()),
+                                 deadline_s, seq)
+            self._entries.append(entry)
+            self.enqueued += 1
+            self._cond.notify_all()
+            return entry
+
+    def close(self) -> None:
+        """Stop accepting work; wake all waiters.  Pending entries stay
+        drainable (flush-on-shutdown)."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    # -- consumer side -------------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._entries)
+
+    def pending(self) -> List[ServeRequest]:
+        """Snapshot of queued entries in arrival order (no removal)."""
+        with self._cond:
+            return list(self._entries)
+
+    def wait_pending(self, timeout: Optional[float] = None) -> bool:
+        """Block until at least one entry is queued or the queue closes.
+        Returns True if entries are pending."""
+        with self._cond:
+            self._cond.wait_for(
+                lambda: self._closed or self._entries, timeout=timeout)
+            return bool(self._entries)
+
+    def wait_arrival(self, seen_enqueued: int,
+                     timeout: Optional[float] = None) -> int:
+        """Block until the lifetime ``enqueued`` counter moves past
+        ``seen_enqueued`` (a NEW arrival), the queue closes, or the
+        timeout lapses; returns the current counter.  This is how the
+        coalescer sleeps while a partial batch ages without busy-polling
+        a non-empty queue."""
+        with self._cond:
+            self._cond.wait_for(
+                lambda: self._closed or self.enqueued > seen_enqueued,
+                timeout=timeout)
+            return self.enqueued
+
+    def take(self, entries: List[ServeRequest]) -> List[ServeRequest]:
+        """Atomically remove ``entries`` (matched by ``seq``); returns the
+        ones actually removed.  An entry another consumer already took is
+        skipped, never double-issued — this is the exactly-once seam."""
+        want = {e.seq for e in entries}
+        with self._cond:
+            taken = [e for e in self._entries if e.seq in want]
+            self._entries = [e for e in self._entries if e.seq not in want]
+            if taken:
+                self._cond.notify_all()      # unblock producers
+            return taken

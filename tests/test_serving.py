@@ -293,3 +293,223 @@ def test_fit_on_demand_quarantines_malformed_requests(capsys):
     # an all-bad queue reports instead of crashing
     empty = fit_on_demand([{}], config=FitConfig(length=3, term=0.3))
     assert empty["problems"] == 0 and empty["rejected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: queue + coalescer invariants (PR 7)
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    """Deterministic injectable clock for queue/coalescer tests."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def two_shape_queue(n_big=6, n_small=5, seed=0):
+    """FitRequests in two distinct compile shapes, interleaved."""
+    rng = np.random.default_rng(seed)
+    g_big = GroupInfo.from_sizes([4] * 6)
+    g_small = GroupInfo.from_sizes([3] * 4)
+    out = []
+    for i in range(max(n_big, n_small)):
+        for g, n, take in ((g_big, 32, i < n_big),
+                           (g_small, 16, i < n_small)):
+            if not take:
+                continue
+            X = rng.normal(size=(n, g.p))
+            y = X @ rng.normal(size=g.p) + 0.1 * rng.normal(size=n)
+            out.append(FitRequest(X, y, g))
+    return out
+
+
+def make_coalescer(clock, max_batch=4, max_wait_s=0.5, capacity=64):
+    from repro.core.config import FitConfig
+    from repro.serving.coalescer import Coalescer, CoalescerConfig
+    from repro.serving.queue import RequestQueue
+    q = RequestQueue(capacity, clock=clock)
+    co = Coalescer(q, FitConfig(length=5),
+                   CoalescerConfig(max_batch=max_batch,
+                                   max_wait_s=max_wait_s, poll_s=0.002))
+    return q, co
+
+
+def test_coalescer_full_batch_releases_without_waiting():
+    """max_batch same-shape arrivals release immediately: the fake clock
+    never moves, so the release cannot be the max-wait rule."""
+    clock = FakeClock()
+    q, co = make_coalescer(clock, max_batch=4)
+    reqs = [r for r in two_shape_queue(8, 0)][:4]
+    for i, r in enumerate(reqs):
+        q.put(r, req_id=f"r{i}")
+    batch, expired = co.next_fleet()
+    assert [e.req_id for e in batch] == ["r0", "r1", "r2", "r3"]
+    assert expired == []
+    assert co.stats["full_batches"] == 1
+    assert co.stats["timeout_batches"] == 0
+
+
+def test_coalescer_max_wait_honored():
+    """A partial batch is held while the oldest member is under
+    max_wait_s and released once it ages past it."""
+    import threading
+    clock = FakeClock()
+    q, co = make_coalescer(clock, max_batch=8, max_wait_s=0.5)
+    q.put(two_shape_queue(1, 0)[0], req_id="lone")
+    result = []
+    t = threading.Thread(target=lambda: result.append(co.next_fleet()))
+    t.start()
+    t.join(timeout=0.1)
+    assert t.is_alive(), "partial batch released before max_wait_s"
+    clock.advance(0.6)                     # age the oldest past the budget
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    batch, expired = result[0]
+    assert [e.req_id for e in batch] == ["lone"] and expired == []
+    assert co.stats["timeout_batches"] == 1
+
+
+def test_coalescer_shape_purity_and_exactly_once():
+    """A mixed-shape drain yields shape-pure fleets whose union is every
+    request exactly once (no drop, no double-serve)."""
+    from repro.batch.scheduler import coalesce_key
+    from repro.core.config import FitConfig
+    clock = FakeClock()
+    q, co = make_coalescer(clock, max_batch=4)
+    reqs = two_shape_queue(6, 5)
+    for i, r in enumerate(reqs):
+        q.put(r, req_id=f"r{i}")
+    q.close()                              # flush: no waiting involved
+    fleets = co.drain_all()
+    cfg = FitConfig(length=5)
+    seen = []
+    for batch, expired in fleets:
+        assert expired == []
+        assert len(batch) <= 4
+        keys = {coalesce_key(e.payload, cfg) for e in batch}
+        assert len(keys) == 1, "mixed compile shapes in one fleet"
+        seen.extend(e.req_id for e in batch)
+    assert sorted(seen) == sorted(f"r{i}" for i in range(len(reqs)))
+    assert len(seen) == len(set(seen)) == len(reqs)
+
+
+def test_coalescer_fifo_across_shapes():
+    """The globally oldest pending request picks the next shape group —
+    a hot shape cannot starve a cold one."""
+    clock = FakeClock()
+    q, co = make_coalescer(clock, max_batch=16)
+    reqs = two_shape_queue(3, 3)           # interleaved big/small
+    for i, r in enumerate(reqs):
+        q.put(r, req_id=f"r{i}")
+    q.close()
+    fleets = co.drain_all()
+    assert len(fleets) == 2
+    first, _ = fleets[0]
+    assert "r0" in [e.req_id for e in first]
+
+
+def test_expired_requests_dead_lettered_before_dispatch():
+    """A request past its TOTAL deadline while queued is dead-lettered
+    with stage="expired" and never costs a fleet dispatch."""
+    from repro.launch.server import ContinuousConfig, ContinuousServer
+    clock = FakeClock()
+    srv = ContinuousServer(ContinuousConfig(max_batch=4, max_wait_s=0.01),
+                           clock=clock)
+    r = two_shape_queue(1, 0)[0]
+    srv.submit(r, req_id="late", deadline_s=0.05)
+    clock.advance(0.2)                     # blow the deadline while queued
+    srv.close()
+    outcomes = srv.run()
+    assert [oc.status for oc in outcomes] == ["expired"]
+    oc = outcomes[0]
+    assert oc.queue_wait_s == pytest.approx(0.2)
+    assert oc.total_latency_s == pytest.approx(0.2)
+    assert srv.stats["dispatched_fleets"] == 0
+    dl = srv.server.dead_letters
+    assert len(dl) == 1 and dl[0].stage == "expired"
+    assert dl[0].queue_wait_s == pytest.approx(0.2)
+    s = srv.summary()
+    assert s["continuous"]["expired"] == 1
+    assert "queue_wait_p99_s" in s and "total_latency_p99_s" in s
+
+
+def test_queue_backpressure_and_close_semantics():
+    from repro.serving.queue import QueueClosed, QueueFull, RequestQueue
+    clock = FakeClock()
+    q = RequestQueue(2, clock=clock)
+    q.put("a"), q.put("b")
+    with pytest.raises(QueueFull):
+        q.put("c", block=False)
+    assert q.rejected_full == 1
+    q.close()
+    with pytest.raises(QueueClosed):
+        q.put("d")
+    # flush semantics: closed queue still drains, exactly once
+    pending = q.pending()
+    assert [e.payload for e in pending] == ["a", "b"]
+    taken = q.take(pending)
+    assert [e.payload for e in taken] == ["a", "b"]
+    assert q.take(pending) == []           # double-take is a no-op
+
+
+def test_outcome_timestamps_split_queue_wait_from_service():
+    """Served outcomes carry enqueued_at/dispatched_at; total latency is
+    queue wait + service, and summary() surfaces both percentiles."""
+    from repro.core.config import FitConfig
+    from repro.launch.server import (ContinuousConfig, ContinuousServer,
+                                     ServerConfig)
+    X, y, g = small_problem()
+    cfg = FitConfig(length=3, term=0.3)
+    srv = ContinuousServer(ContinuousConfig(
+        server=ServerConfig(fit=cfg,
+                            ladder=("sequential", "reference")),
+        max_batch=4, max_wait_s=0.01, result_cache=8))
+    req = FitRequest(X, y, g, alpha=0.9)
+    srv.submit(req, req_id="a")
+    srv.submit(req, req_id="b")            # identical fit: cache candidate
+    srv.close()
+    outcomes = {oc.req_id: oc for oc in srv.run()}
+    assert outcomes["a"].status == "served"
+    for oc in outcomes.values():
+        assert oc.dispatched_at >= oc.enqueued_at
+        assert oc.queue_wait_s >= 0
+        assert oc.total_latency_s == pytest.approx(
+            oc.queue_wait_s + oc.latency_s, abs=1e-9)
+    s = srv.summary()
+    assert s["total_latency_p50_s"] >= s["latency_p50_s"] >= 0
+    assert s["requests_per_s"] > 0
+
+
+def test_result_cache_serves_repeat_fits():
+    """An identical repeat fit inside one drain is served level="cache"
+    with a result numerically identical to the fitted lane."""
+    from repro.core.config import FitConfig
+    from repro.launch.server import (ContinuousConfig, ContinuousServer,
+                                     ServerConfig)
+    X, y, g = small_problem()
+    cfg = FitConfig(length=3, term=0.3)
+    # pipeline=False: fleet k's results must be recorded before fleet k+1's
+    # cache check, else the repeat lands before its twin's result is cached
+    srv = ContinuousServer(ContinuousConfig(
+        server=ServerConfig(fit=cfg, ladder=("sequential", "reference")),
+        max_batch=2, max_wait_s=0.01, result_cache=8, pipeline=False))
+    req = FitRequest(X, y, g, alpha=0.9)
+    for rid in ("a", "b", "c"):
+        srv.submit(req, req_id=rid)
+    srv.close()
+    outcomes = {oc.req_id: oc for oc in srv.run()}
+    assert all(oc.status == "served" for oc in outcomes.values())
+    levels = sorted(oc.level for oc in outcomes.values())
+    assert "cache" in levels
+    fitted = next(oc for oc in outcomes.values() if oc.level != "cache")
+    cached = next(oc for oc in outcomes.values() if oc.level == "cache")
+    np.testing.assert_array_equal(np.asarray(fitted.result.betas),
+                                  np.asarray(cached.result.betas))
+    assert srv.stats["cache_served"] >= 1
+    assert srv.summary()["result_cache"]["hits"] >= 1
